@@ -1,0 +1,156 @@
+"""Perf-hillclimb driver (§Perf): lower one (arch x shape x mesh) combo with
+sharding/lowering overrides, print the roofline terms and the largest
+collective instructions so each hypothesis -> change -> measure cycle is one
+command.
+
+Usage (examples):
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch llava-next-34b \
+      --shape decode_32k --unroll                    # baseline
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch llava-next-34b \
+      --shape decode_32k --unroll --rule embed=none  # no-FSDP variant
+  ... --out results/hillclimb.jsonl --tag no_fsdp
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse            # noqa: E402
+import json                # noqa: E402
+import re                  # noqa: E402
+import time                # noqa: E402
+from collections import Counter  # noqa: E402
+
+from repro.configs import ARCH_IDS                  # noqa: E402
+from repro.configs.shapes import SHAPES             # noqa: E402
+from repro.launch.build import lower_combo          # noqa: E402
+from repro.launch.hlo_analysis import (             # noqa: E402
+    _INSTR_RE,
+    _group_size,
+    _shape_bytes,
+    analytic_model_flops,
+    roofline_from_compiled,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.sharding import RuleSet           # noqa: E402
+
+
+def parse_rules(pairs: list[str]) -> dict:
+    out = {}
+    for p in pairs:
+        name, _, axis = p.partition("=")
+        if axis in ("none", "None", ""):
+            out[name] = None
+        elif "+" in axis:
+            out[name] = tuple(axis.split("+"))
+        else:
+            out[name] = axis
+    return out
+
+
+def top_collectives(hlo_text: str, k: int = 12) -> list[tuple]:
+    """Largest collective instructions: (wire_bytes, count, kind, shape)."""
+    agg: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m is None or "-done(" in line:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        n = max(2, _group_size(line))
+        wire = {"all-gather": size * (n - 1) / n,
+                "all-reduce": 2 * size * (n - 1) / n,
+                "reduce-scatter": size * (n - 1),
+                "all-to-all": size * (n - 1) / n}.get(kind, size)
+        agg[(kind, shape_str.strip(), n)] += int(wire)
+    rows = [(b, kind, shape, n) for (kind, shape, n), b in agg.items()]
+    return sorted(rows, reverse=True)[:k]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--shape", required=True, choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer scan for exact cost analysis")
+    ap.add_argument("--rule", action="append", default=[],
+                    metavar="logical=axis", help="override a sharding rule, "
+                    "e.g. embed=none, ff=model, batch=pod+data")
+    ap.add_argument("--no-seq-shard", action="store_true",
+                    help="disable seq sharding for small batch")
+    ap.add_argument("--no-cache-seq-shard", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--set", action="append", default=[], dest="cfg_sets",
+                    metavar="field=int", help="override an int ModelConfig "
+                    "field, e.g. mlstm_chunk=256, attn_chunk=512")
+    ap.add_argument("--pad-heads", type=int, default=0, metavar="MULT",
+                    help="pad q/kv head counts to a multiple (head-parallel "
+                    "attention sharding)")
+    ap.add_argument("--moe-group-size", type=int, default=256)
+    ap.add_argument("--dtype", default="bfloat16")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    rules = RuleSet(
+        shard_cache_seq_when_b1=not args.no_cache_seq_shard,
+        shard_seq_when_small_batch=not args.no_seq_shard,
+    ).with_overrides(**parse_rules(args.rule))
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    t0 = time.time()
+    with mesh:
+        combo = lower_combo(args.arch, args.shape, mesh,
+                            dtype=args.dtype, ruleset=rules,
+                            moe_group_size=args.moe_group_size,
+                            remat=not args.no_remat,
+                            pad_heads=args.pad_heads,
+                            cfg_updates={k: int(v) for k, _, v in
+                                         (s.partition("=") for s in
+                                          args.cfg_sets)},
+                            unroll=True if args.unroll else 1)
+        t1 = time.time()
+        compiled = combo.lowered.compile()
+        t_compile = time.time() - t1
+        hlo = compiled.as_text()
+        mf = analytic_model_flops(combo.cfg, SHAPES[args.shape])
+        roof = roofline_from_compiled(compiled, combo.chips, hlo, mf)
+        mem = compiled.memory_analysis()
+        bytes_per_dev = sum(
+            int(getattr(mem, a, 0) or 0)
+            for a in ("argument_size_in_bytes", "temp_size_in_bytes",
+                      "output_size_in_bytes")) if mem is not None else 0
+
+    s = roof.summary()
+    print(f"== {args.arch} x {args.shape} "
+          f"mesh={'x'.join(map(str, mesh.devices.shape))} tag={args.tag} "
+          f"unroll={args.unroll} (lower {t1-t0:.0f}s compile {t_compile:.0f}s)")
+    print(f"  compute_s    {s['compute_s']:.6g}")
+    print(f"  memory_s     {s['memory_s']:.6g}")
+    print(f"  collective_s {s['collective_s']:.6g}   <- bottleneck: "
+          f"{s['bottleneck']}")
+    print(f"  useful_flops_ratio {s['useful_flops_ratio']:.4f}   "
+          f"bytes/dev {bytes_per_dev/1e9:.2f} GB   "
+          f"n_collectives {s['n_collectives']}")
+    print(f"  by kind: { {k: f'{v/1e9:.2f}GB' for k, v in s['collectives_by_kind'].items()} }")
+    print("  top collectives (wire bytes, kind, result shape, group):")
+    for b, kind, shape, n in top_collectives(hlo, args.top):
+        shape = re.sub(r"\s+", " ", shape)[:90]
+        print(f"    {b/1e9:10.3f} GB  {kind:18s} g={n:<4d} {shape}")
+
+    if args.out:
+        rec = {"arch": args.arch, "shape": args.shape,
+               "mesh": "x".join(map(str, mesh.devices.shape)),
+               "tag": args.tag, "unrolled": bool(args.unroll),
+               "rules": args.rule, "dtype": args.dtype,
+               "no_remat": args.no_remat, "pad_heads": args.pad_heads,
+               "cfg_sets": args.cfg_sets,
+               "moe_group_size": args.moe_group_size,
+               "bytes_per_device": bytes_per_dev,
+               "roofline": s}
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

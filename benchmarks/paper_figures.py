@@ -1,0 +1,181 @@
+"""One benchmark per paper figure/table (§6).
+
+Each function runs the relevant scenarios and returns rows of
+(figure, scenario, metric, value) — ``run.py`` aggregates them into the CSV
+consumed by EXPERIMENTS.md §Paper-validation.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+from repro.core.metrics import Metrics
+from repro.sim import SCENARIOS, ScenarioConfig, run_scenario
+from repro.sim.traces import TraceConfig, generate_trace, potential_counts
+
+Row = tuple[str, str, str, float]
+
+
+@lru_cache(maxsize=None)
+def _run(name: str, n_frames: int, seed: int = 0) -> Metrics:
+    base = SCENARIOS[name]
+    cfg = ScenarioConfig(
+        name=base.name, trace=base.trace, algorithm=base.algorithm,
+        preemption=base.preemption, n_frames=n_frames, seed=seed)
+    return run_scenario(cfg)
+
+
+# Paper reference values for side-by-side comparison in the CSV.
+PAPER = {
+    ("fig2a", "UPS", "frame_completion_pct"): 50.0,
+    ("fig2a", "UNPS", "frame_completion_pct"): 45.0,
+    ("fig2a", "WPS_4", "frame_completion_pct"): 32.4,
+    ("fig2a", "WNPS_4", "frame_completion_pct"): 29.36,
+    ("fig2a", "DPW", "frame_completion_pct"): 8.96,
+    ("fig2a", "DNPW", "frame_completion_pct"): 5.64,
+    ("fig2a", "CPW", "frame_completion_pct"): 9.65,
+    ("fig2a", "CNPW", "frame_completion_pct"): 9.23,
+    ("fig3", "UPS", "hp_completion_pct"): 99.0,
+    ("fig3", "UNPS", "hp_completion_pct"): 80.0,
+    ("fig3", "WNPS_4", "hp_completion_pct"): 72.1,
+    ("fig3", "CNPW", "hp_completion_pct"): 89.56,
+    ("fig3", "DNPW", "hp_completion_pct"): 76.75,
+    ("fig4", "WPS_4", "lp_completion_pct"): 51.73,
+    ("fig4", "WNPS_4", "lp_completion_pct"): 63.31,
+    ("fig4", "CPW", "lp_completion_pct"): 15.65,
+    ("fig4", "CNPW", "lp_completion_pct"): 13.76,
+    ("fig4", "DPW", "lp_completion_pct"): 14.20,
+    ("fig4", "DNPW", "lp_completion_pct"): 11.36,
+    ("fig4", "WPS_1", "lp_completion_pct"): 71.71,
+    ("fig4", "WPS_2", "lp_completion_pct"): 72.07,
+    ("fig4", "WPS_3", "lp_completion_pct"): 60.78,
+    ("table2", "UPS", "lp_generated"): 8640,
+    ("table2", "UNPS", "lp_generated"): 6961,
+    ("table2", "WPS_4", "lp_generated"): 13941,
+    ("table2", "WNPS_4", "lp_generated"): 9966,
+    ("table2", "DPW", "lp_generated"): 13935,
+    ("table2", "CPW", "lp_generated"): 13800,
+}
+
+
+def fig2_frame_completion(n_frames: int) -> list[Row]:
+    rows = []
+    for name in ("UPS", "UNPS", "WPS_4", "WNPS_4", "DPW", "DNPW", "CPW",
+                 "CNPW"):
+        m = _run(name, n_frames)
+        rows.append(("fig2a", name, "frame_completion_pct",
+                     m.pct(m.frames_completed, m.frames_total)))
+    for name in ("WPS_1", "WPS_2", "WPS_3", "WPS_4"):
+        m = _run(name, n_frames)
+        rows.append(("fig2b", name, "frame_completion_pct",
+                     m.pct(m.frames_completed, m.frames_total)))
+    return rows
+
+
+def fig3_hp_completion(n_frames: int) -> list[Row]:
+    rows = []
+    for name in ("UPS", "UNPS", "WPS_4", "WNPS_4", "DPW", "DNPW", "CPW",
+                 "CNPW"):
+        m = _run(name, n_frames)
+        rows.append(("fig3", name, "hp_completion_pct",
+                     m.pct(m.hp_completed, m.hp_generated)))
+        rows.append(("fig3", name, "hp_via_preemption_pct",
+                     m.pct(m.hp_completed_via_preemption, m.hp_generated)))
+    return rows
+
+
+def fig4_6_lp_completion(n_frames: int) -> list[Row]:
+    rows = []
+    for name in ("UPS", "UNPS", "WPS_1", "WPS_2", "WPS_3", "WPS_4",
+                 "WNPS_4", "DPW", "DNPW", "CPW", "CNPW"):
+        m = _run(name, n_frames)
+        rows.append(("fig4", name, "lp_completion_pct",
+                     m.pct(m.lp_completed, m.lp_generated)))
+        rows.append(("fig5", name, "lp_per_request_completion_pct",
+                     100.0 * sum(m.lp_request_fractions)
+                     / max(len(m.lp_request_fractions), 1)))
+        rows.append(("fig6", name, "lp_offloaded_completion_pct",
+                     m.pct(m.lp_offloaded_completed, m.lp_offloaded)))
+    return rows
+
+
+def fig7_preempted_config(n_frames: int) -> list[Row]:
+    rows = []
+    for name in ("UPS", "WPS_1", "WPS_2", "WPS_3", "WPS_4", "DPW", "CPW"):
+        m = _run(name, n_frames)
+        total = max(m.preemptions, 1)
+        rows.append(("fig7", name, "preempted_2core_pct",
+                     100.0 * m.preempted_by_cores.get(2, 0) / total))
+        rows.append(("fig7", name, "preempted_4core_pct",
+                     100.0 * m.preempted_by_cores.get(4, 0) / total))
+    return rows
+
+
+def fig8_core_allocation(n_frames: int) -> list[Row]:
+    rows = []
+    for name in ("WPS_4", "WNPS_4", "DPW", "CPW"):
+        m = _run(name, n_frames)
+        for cores in (2, 4):
+            rows.append(("fig8", name, f"core{cores}_local",
+                         float(m.core_alloc_local.get(cores, 0))))
+            rows.append(("fig8", name, f"core{cores}_offloaded",
+                         float(m.core_alloc_offloaded.get(cores, 0))))
+    return rows
+
+
+def fig9_10_scheduler_times(n_frames: int) -> list[Row]:
+    rows = []
+    for name in ("UPS", "UNPS", "WPS_1", "WPS_2", "WPS_3", "WPS_4",
+                 "WNPS_4"):
+        m = _run(name, n_frames)
+        s = m.summary()
+        rows.append(("fig9", name, "t_hp_initial_ms", s["t_hp_initial_ms"]))
+        rows.append(("fig9", name, "t_hp_preempt_ms", s["t_hp_preempt_ms"]))
+        rows.append(("fig10", name, "t_lp_alloc_ms", s["t_lp_alloc_ms"]))
+        rows.append(("fig10", name, "t_realloc_ms", s["t_realloc_ms"]))
+    return rows
+
+
+def table2_lp_generated(n_frames: int) -> list[Row]:
+    rows = []
+    for name in ("UPS", "UNPS", "WPS_1", "WPS_2", "WPS_3", "WPS_4",
+                 "WNPS_4", "CPW", "CNPW", "DPW", "DNPW"):
+        m = _run(name, n_frames)
+        rows.append(("table2", name, "lp_generated", float(m.lp_generated)))
+    return rows
+
+
+def table3_reallocation(n_frames: int) -> list[Row]:
+    rows = []
+    for name in ("UPS", "WPS_1", "WPS_2", "WPS_3", "WPS_4", "DPW"):
+        m = _run(name, n_frames)
+        rows.append(("table3", name, "realloc_failure",
+                     float(m.realloc_failure)))
+        rows.append(("table3", name, "realloc_success",
+                     float(m.realloc_success)))
+    return rows
+
+
+def table4_potential_tasks(n_frames: int) -> list[Row]:
+    rows = []
+    for trace in ("uniform", "weighted_1", "weighted_2", "weighted_3",
+                  "weighted_4"):
+        tr = generate_trace(TraceConfig(trace, n_frames=n_frames))
+        c = potential_counts(tr)
+        rows.append(("table4", trace, "potential_low_priority",
+                     float(c["potential_low_priority"])))
+        rows.append(("table4", trace, "potential_high_priority",
+                     float(c["potential_high_priority"])))
+    return rows
+
+
+ALL_FIGURES = [
+    fig2_frame_completion,
+    fig3_hp_completion,
+    fig4_6_lp_completion,
+    fig7_preempted_config,
+    fig8_core_allocation,
+    fig9_10_scheduler_times,
+    table2_lp_generated,
+    table3_reallocation,
+    table4_potential_tasks,
+]

@@ -1,0 +1,76 @@
+"""Roofline table assembly from dry-run artifacts (results/*.jsonl).
+
+Reads the recorded dry-run/roofline jsonl files and emits per-(arch, shape,
+mesh) rows: the three terms, the dominant bottleneck, MODEL_FLOPS and the
+useful-flops ratio — EXPERIMENTS.md §Roofline is generated from this.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load_records(*names: str) -> list[dict]:
+    recs = []
+    for name in names:
+        path = os.path.join(RESULTS, name)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for line in f:
+                recs.append(json.loads(line))
+    # de-dup on (arch, shape, mesh, unrolled) keeping the last occurrence
+    seen: dict = {}
+    for r in recs:
+        key = (r["arch"], r["shape"], r["mesh"], r.get("unrolled", False))
+        seen[key] = r
+    return list(seen.values())
+
+
+def roofline_rows(prefer_unrolled: bool = True) -> list[tuple]:
+    # precedence: f32 methodology runs > unrolled bf16 > scan bf16
+    # (see EXPERIMENTS.md methodology notes)
+    recs = load_records("dryrun_full.jsonl", "roofline_unrolled.jsonl",
+                        "roofline_f32.jsonl")
+    by_combo: dict = {}
+
+    def rank(r):
+        return (r.get("dtype") == "float32", bool(r.get("unrolled")))
+
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        cur = by_combo.get(key)
+        if cur is None or (prefer_unrolled and rank(r) > rank(cur)):
+            by_combo[key] = r
+    rows = []
+    for (arch, shape, mesh), r in sorted(by_combo.items()):
+        ro = r["roofline"]
+        rows.append((
+            arch, shape, mesh,
+            ro["compute_s"], ro["memory_s"], ro["collective_s"],
+            ro["bottleneck"], ro.get("model_flops", 0.0),
+            ro.get("useful_flops_ratio", 0.0),
+            r.get("total_bytes_per_device", 0),
+            bool(r.get("unrolled", False)),
+            r.get("dtype", "bfloat16"),
+        ))
+    return rows
+
+
+def print_table() -> None:
+    rows = roofline_rows()
+    hdr = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+           "bottleneck", "model_flops", "useful_ratio", "bytes_per_dev",
+           "unrolled", "dtype")
+    print(",".join(hdr))
+    for row in rows:
+        print(",".join(
+            f"{v:.6g}" if isinstance(v, float) else str(v) for v in row))
+
+
+if __name__ == "__main__":
+    print_table()

@@ -1,0 +1,43 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Reproduces every paper table/figure (full 1296-frame workload by default;
+``--fast`` uses 300 frames), runs the scheduler micro-benchmarks, and — if
+dry-run artifacts exist under results/ — appends the roofline table.
+
+Output: ``figure,scenario,metric,value[,paper_value]`` CSV on stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import paper_figures, roofline_report, scheduler_micro
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="300 frames instead of the paper's 1296")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+    n_frames = 300 if args.fast else 1296
+
+    print("figure,scenario,metric,value,paper_value")
+    t0 = time.time()
+    for fn in paper_figures.ALL_FIGURES:
+        for fig, scen, metric, value in fn(n_frames):
+            paper = paper_figures.PAPER.get((fig, scen, metric), "")
+            print(f"{fig},{scen},{metric},{value:.3f},{paper}")
+        sys.stdout.flush()
+    for fig, scen, metric, value in scheduler_micro.bench_scheduler_scaling():
+        print(f"{fig},{scen},{metric},{value:.3f},")
+
+    if not args.skip_roofline:
+        print()
+        roofline_report.print_table()
+    print(f"# total bench time: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

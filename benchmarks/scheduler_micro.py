@@ -1,0 +1,59 @@
+"""Scheduler micro-benchmarks: wall-clock per allocation call vs network
+load (the paper's §6.3 complexity discussion: HP ~ O(local tasks),
+LP ~ O(total tasks^2))."""
+from __future__ import annotations
+
+import time
+
+from repro.core.calendar import NetworkState
+from repro.core.network import NetworkConfig
+from repro.core.scheduler import PreemptionAwareScheduler
+from repro.core.task import LowPriorityRequest, Priority, Task
+
+
+def _loaded_state(n_devices: int, n_tasks: int, net: NetworkConfig):
+    """A network with n_tasks LP reservations spread across devices/time."""
+    state = NetworkState(n_devices)
+    sched = PreemptionAwareScheduler(state, net, preemption=True)
+    t = 0.0
+    placed = 0
+    while placed < n_tasks:
+        req = LowPriorityRequest(source_device=placed % n_devices,
+                                 deadline=t + 120.0, frame_id=placed,
+                                 n_tasks=1)
+        req.make_tasks()
+        res = sched.allocate_low_priority(req, t)
+        placed += 1
+        if not res.allocations:
+            t += 5.0
+    return state, sched
+
+
+def bench_scheduler_scaling(loads=(8, 32, 128), reps: int = 30):
+    """Rows: (bench, load, metric, us_per_call)."""
+    rows = []
+    net = NetworkConfig()
+    for load in loads:
+        state, sched = _loaded_state(4, load, net)
+        # HP allocation timing (fresh task each rep, rolled back after)
+        t0 = time.perf_counter()
+        for i in range(reps):
+            task = Task(priority=Priority.HIGH, source_device=i % 4,
+                        deadline=1e6, frame_id=i)
+            res = sched.allocate_high_priority(task, 0.0)
+            if res.allocation is not None:
+                state.devices[task.device].release(task)
+                for slot in res.allocation.link_slots:
+                    state.link.cancel(slot)
+        hp_us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append(("sched_micro", str(load), "hp_alloc_us", hp_us))
+
+        t0 = time.perf_counter()
+        for i in range(reps):
+            req = LowPriorityRequest(source_device=i % 4, deadline=1e5,
+                                     frame_id=i, n_tasks=1)
+            req.make_tasks()
+            sched.allocate_low_priority(req, 0.0)
+        lp_us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append(("sched_micro", str(load), "lp_alloc_us", lp_us))
+    return rows

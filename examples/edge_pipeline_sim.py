@@ -1,0 +1,53 @@
+"""End-to-end reproduction driver: the paper's 4-device RPi2B waste-
+classification experiment, as a calibrated discrete-event simulation.
+
+Runs the preemption-aware scheduler against its non-preemption variant and
+the two workstealer baselines on the paper's workload, and prints the
+headline comparison (paper §6):
+
+  PYTHONPATH=src python examples/edge_pipeline_sim.py [--frames 300]
+  PYTHONPATH=src python examples/edge_pipeline_sim.py --scenario WPS_4
+
+Scenario ids follow the paper's Table 1 legend (UPS, UNPS, WPS_1..4,
+WNPS_4, DPW, DNPW, CPW, CNPW).
+"""
+import argparse
+from dataclasses import replace
+
+from repro.sim.experiment import SCENARIOS, run_scenario
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=300,
+                    help="paper uses 1296 (~15s on this host)")
+    ap.add_argument("--scenario", choices=tuple(SCENARIOS), default=None,
+                    help="run one scenario verbosely instead of the sweep")
+    args = ap.parse_args()
+
+    names = [args.scenario] if args.scenario else \
+        ["UPS", "UNPS", "WPS_4", "WNPS_4", "DPW", "DNPW", "CPW", "CNPW"]
+
+    print(f"{'scenario':8s} {'frames%':>8s} {'HP%':>7s} {'HP-preempt%':>11s} "
+          f"{'LP%':>7s} {'LP/req%':>8s} {'preempts':>8s} {'realloc ok':>10s}")
+    for name in names:
+        cfg = replace(SCENARIOS[name], n_frames=args.frames)
+        m = run_scenario(cfg)
+        s = m.summary()
+        print(f"{name:8s} {s['frame_completion_pct']:8.2f} "
+              f"{s['hp_completion_pct']:7.2f} "
+              f"{s['hp_via_preemption_pct']:11.2f} "
+              f"{s['lp_completion_pct']:7.2f} "
+              f"{s['lp_per_request_completion_pct']:8.2f} "
+              f"{m.preemptions:8d} {m.realloc_success:10d}")
+
+    if not args.scenario:
+        print("\npaper's headline claims (1296 frames): preemption scheduler "
+              "completes ~99% of HP tasks (vs 72-80% without) and +3-8% "
+              "frames; schedulers beat workstealers by ~23% under "
+              "weighted-4. Run with --frames 1296 to reproduce "
+              "benchmarks/paper_figures.py exactly.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .store import exists, load_metadata, restore, save  # noqa: F401

@@ -1,0 +1,68 @@
+"""Pytree checkpointing: flat .npz payload + JSON manifest.
+
+No external deps (orbax unavailable offline).  Leaves are addressed by their
+jax.tree_util key-path string; restore validates structure against a
+reference tree (shapes + dtypes) so partial/corrupt checkpoints fail loudly.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any, metadata: Optional[dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    manifest = {
+        "leaves": {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in flat.items()
+        },
+        "metadata": metadata or {},
+    }
+    tmp = os.path.join(path, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, os.path.join(path, "manifest.json"))
+
+
+def load_metadata(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["metadata"]
+
+
+def restore(path: str, reference: Any) -> Any:
+    """Restore into the structure of ``reference`` (a pytree of arrays or
+    ShapeDtypeStructs)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    paths, treedef = jax.tree_util.tree_flatten_with_path(reference)
+    leaves = []
+    for path_elems, ref in paths:
+        key = jax.tree_util.keystr(path_elems)
+        if key not in manifest["leaves"]:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != expected {ref.shape}")
+        leaves.append(arr.astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def exists(path: str) -> bool:
+    return os.path.exists(os.path.join(path, "manifest.json"))

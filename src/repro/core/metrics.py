@@ -1,0 +1,98 @@
+"""Experiment counters — one field-group per paper figure/table."""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, field
+from statistics import mean
+from typing import Any
+
+
+def _mean_ms(xs: list[float]) -> float:
+    return mean(xs) * 1e3 if xs else 0.0
+
+
+@dataclass
+class Metrics:
+    scenario: str = ""
+
+    # Fig 2 — frame completion
+    frames_total: int = 0
+    frames_completed: int = 0
+
+    # Fig 3 — high-priority completion (split by whether preemption was used)
+    hp_generated: int = 0
+    hp_completed: int = 0
+    hp_completed_via_preemption: int = 0
+    hp_failed_alloc: int = 0
+    hp_failed_runtime: int = 0
+
+    # Fig 4/5/6, Table 2 — low-priority completion
+    lp_generated: int = 0
+    lp_allocated: int = 0
+    lp_completed: int = 0
+    lp_failed_alloc: int = 0
+    lp_offloaded: int = 0
+    lp_offloaded_completed: int = 0
+    lp_requests_total: int = 0
+    lp_requests_completed: int = 0
+    lp_request_fractions: list[float] = field(default_factory=list)
+
+    # Fig 7, Table 3 — preemption
+    preemptions: int = 0
+    preempted_by_cores: Counter = field(default_factory=Counter)
+    realloc_success: int = 0
+    realloc_failure: int = 0
+
+    # Fig 8 — core allocation of LP tasks
+    core_alloc_local: Counter = field(default_factory=Counter)
+    core_alloc_offloaded: Counter = field(default_factory=Counter)
+
+    # Fig 9/10 — scheduler wall-clock times (seconds)
+    t_hp_initial: list[float] = field(default_factory=list)
+    t_hp_preempt: list[float] = field(default_factory=list)
+    t_lp_alloc: list[float] = field(default_factory=list)
+    t_realloc: list[float] = field(default_factory=list)
+
+    def pct(self, num: int, den: int) -> float:
+        return 100.0 * num / den if den else 0.0
+
+    def summary(self) -> dict[str, Any]:
+        return {
+            "scenario": self.scenario,
+            "frames_total": self.frames_total,
+            "frame_completion_pct": round(
+                self.pct(self.frames_completed, self.frames_total), 2
+            ),
+            "hp_generated": self.hp_generated,
+            "hp_completion_pct": round(self.pct(self.hp_completed, self.hp_generated), 2),
+            "hp_via_preemption_pct": round(
+                self.pct(self.hp_completed_via_preemption, self.hp_generated), 2
+            ),
+            "lp_generated": self.lp_generated,
+            "lp_completion_pct": round(self.pct(self.lp_completed, self.lp_generated), 2),
+            "lp_offloaded": self.lp_offloaded,
+            "lp_offloaded_completion_pct": round(
+                self.pct(self.lp_offloaded_completed, self.lp_offloaded), 2
+            ),
+            "lp_per_request_completion_pct": round(
+                100.0 * mean(self.lp_request_fractions), 2
+            )
+            if self.lp_request_fractions
+            else 0.0,
+            "lp_set_completion_pct": round(
+                self.pct(self.lp_requests_completed, self.lp_requests_total), 2
+            ),
+            "preemptions": self.preemptions,
+            "preempted_2core": self.preempted_by_cores.get(2, 0),
+            "preempted_4core": self.preempted_by_cores.get(4, 0),
+            "realloc_success": self.realloc_success,
+            "realloc_failure": self.realloc_failure,
+            "core2_local": self.core_alloc_local.get(2, 0),
+            "core4_local": self.core_alloc_local.get(4, 0),
+            "core2_offloaded": self.core_alloc_offloaded.get(2, 0),
+            "core4_offloaded": self.core_alloc_offloaded.get(4, 0),
+            "t_hp_initial_ms": round(_mean_ms(self.t_hp_initial), 3),
+            "t_hp_preempt_ms": round(_mean_ms(self.t_hp_preempt), 3),
+            "t_lp_alloc_ms": round(_mean_ms(self.t_lp_alloc), 3),
+            "t_realloc_ms": round(_mean_ms(self.t_realloc), 3),
+        }

@@ -1,0 +1,91 @@
+"""Communication model: message sizes, throughput and time-slot padding.
+
+All constants are the paper's benchmarked values (§5):
+  high-priority allocation message : 700 B
+  low-priority allocation message  : 2250 B
+  state update                     : 550 B
+  preemption message               : 550 B
+  input (image) transfer           : 21500 B
+Throughput was measured with iperf3 at system start-up (~16.3 MB/s with
+preemption run, ~18.78 MB/s without); communication slots are padded with the
+measured network jitter, processing slots with the benchmark std-dev (§3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class MessageSizes:
+    hp_alloc: int = 700
+    lp_alloc: int = 2250
+    state_update: int = 550
+    preempt: int = 550
+    input_transfer: int = 21500
+
+
+@dataclass(frozen=True)
+class NetworkConfig:
+    """Timing model shared by the scheduler and the simulator."""
+
+    throughput_bps: float = 16.3e6          # bytes/s, measured at start-up
+    jitter_pad_s: float = 0.002             # comm slot padding (network jitter)
+    msg: MessageSizes = field(default_factory=MessageSizes)
+
+    # Benchmarked processing times on the RPi2B (§5) and their slot padding
+    # (std-dev of the offline benchmark runs, §3).
+    t_object_detect: float = 0.100          # stage 1, constant overhead
+    t_hp: float = 0.980                     # stage 2, 1 core
+    t_lp_2core: float = 16.862              # stage 3, 2-core horizontal split
+    t_lp_4core: float = 11.611              # stage 3, 4-core horizontal split
+    hp_pad_s: float = 0.050
+    lp_pad_s: float = 0.400
+
+    # Pipeline cadence (§5): derived from the minimum viable end-to-end time.
+    frame_period: float = 18.86
+    # HP deadline slack beyond detect+proc (paper: stage-2 deadline ~1 s;
+    # must cover allocation + preemption-selection latency, §6.3).
+    hp_deadline_slack: float = 0.45
+
+    # Controller job-queue latencies (paper §3.3: blocking sequential request
+    # processing; §6.3: HP alloc ~10 ms, LP alloc ~150 ms, preemption +
+    # reallocation pushing HP paths toward ~300-400 ms under load).
+    ctrl_hp_alloc_lat: float = 0.010
+    ctrl_hp_preempt_extra: float = 0.040
+    ctrl_lp_alloc_lat: float = 0.150
+    ctrl_realloc_lat: float = 0.250
+
+    # Contention-induced slowdown (paper §8 reports the 11.611 s benchmarked
+    # 4-core task averaging ~14.5 s under middleware + concurrent-DNN load).
+    # The paper's own 18.86 s frame period is derived so a 2-core task barely
+    # fits its window, so the benchmarked times must already include typical
+    # co-location; we model only *additional* contention, mildly:
+    # exec = base * (1 + coef * other_busy_cores/capacity).
+    lp_contention_coef: float = 0.05
+    hp_contention_coef: float = 0.03
+
+    def slot(self, n_bytes: int) -> float:
+        """Duration of a padded link time-slot for an n-byte message."""
+        return n_bytes / self.throughput_bps + self.jitter_pad_s
+
+    def lp_proc_time(self, cores: int) -> float:
+        if cores == 2:
+            return self.t_lp_2core
+        if cores == 4:
+            return self.t_lp_4core
+        raise ValueError(f"unsupported LP core configuration: {cores}")
+
+    def lp_slot_time(self, cores: int) -> float:
+        return self.lp_proc_time(cores) + self.lp_pad_s
+
+    @property
+    def hp_slot_time(self) -> float:
+        return self.t_hp + self.hp_pad_s
+
+    @property
+    def lp_core_options(self) -> tuple[int, ...]:
+        """Viable horizontal-partitioning configs, minimum first (§3.2)."""
+        return (2, 4)
+
+    def hp_deadline(self, request_time: float) -> float:
+        return request_time + self.t_hp + self.hp_deadline_slack

@@ -1,0 +1,314 @@
+"""The paper's two scheduling algorithms (§4).
+
+High-priority allocation: local-only, single-core, allocated at arrival time;
+optionally backed by the deadline-aware preemption mechanism.
+
+Low-priority allocation: offloadable, multi-configuration (2/4-core horizontal
+partitioning), searching over the completion time-points of already-allocated
+tasks up to the request deadline, with partial allocation, even spreading and
+a core-upgrade pass.
+"""
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .calendar import NetworkState, Reservation
+from .metrics import Metrics
+from .network import NetworkConfig
+from .task import LowPriorityRequest, Priority, Task, TaskState
+
+
+@dataclass
+class Allocation:
+    """A committed placement decision for a single task."""
+
+    task: Task
+    device: int
+    t_start: float
+    t_end: float                       # end of reserved slot (incl. padding)
+    cores: int
+    offloaded: bool
+    link_slots: list[Reservation] = field(default_factory=list)
+
+
+@dataclass
+class HPResult:
+    success: bool
+    allocation: Optional[Allocation] = None
+    preempted: list[Task] = field(default_factory=list)
+    reallocations: list[Allocation] = field(default_factory=list)
+
+
+@dataclass
+class LPResult:
+    allocations: list[Allocation] = field(default_factory=list)
+    failed: list[Task] = field(default_factory=list)
+
+
+class PreemptionAwareScheduler:
+    """Controller-side scheduler over the time-slotted network state."""
+
+    def __init__(
+        self,
+        state: NetworkState,
+        net: NetworkConfig,
+        preemption: bool = True,
+        metrics: Optional[Metrics] = None,
+        on_preempt: Optional[Callable[[Task], None]] = None,
+        victim_policy: str = "farthest_deadline",
+    ) -> None:
+        self.state = state
+        self.net = net
+        self.preemption = preemption
+        self.metrics = metrics if metrics is not None else Metrics()
+        # Callback into the runtime so a running victim is actually stopped.
+        self.on_preempt = on_preempt
+        # Victim selection among conflicting LP reservations:
+        #   "farthest_deadline"  the paper's §4 rule.
+        #   "weakest_set"        the paper's §8 future-work proposal
+        #                        (beyond-paper): prefer a victim whose request
+        #                        set is least likely to complete anyway —
+        #                        fewest healthy siblings — so preemption
+        #                        destroys the least prospective frame value;
+        #                        tie-break by farthest deadline.
+        if victim_policy not in ("farthest_deadline", "weakest_set"):
+            raise ValueError(victim_policy)
+        self.victim_policy = victim_policy
+        self._requests: dict[int, LowPriorityRequest] = {}
+
+    # ------------------------------------------------------------------ #
+    # High-priority algorithm                                            #
+    # ------------------------------------------------------------------ #
+    def allocate_high_priority(self, task: Task, now: float) -> HPResult:
+        t_wall = _time.perf_counter()
+        self.state.gc(now)
+        result = self._hp_inner(task, now)
+        elapsed = _time.perf_counter() - t_wall
+        if result.preempted:
+            self.metrics.t_hp_preempt.append(elapsed)
+        else:
+            self.metrics.t_hp_initial.append(elapsed)
+        return result
+
+    def _hp_inner(self, task: Task, now: float) -> HPResult:
+        net, link = self.net, self.state.link
+        dev = self.state.devices[task.source_device]
+        msg_dur = net.slot(net.msg.hp_alloc)
+
+        def placement():
+            """(msg_t1, t1, t2) for the earliest feasible window, or None if
+            the deadline can't be met.  Recomputed after every preemption —
+            each preempt message occupies the link and pushes the allocation
+            message (and hence the processing window) later."""
+            msg_t1 = link.earliest_slot(msg_dur, now)
+            arrival = msg_t1 + msg_dur
+            if arrival + net.t_hp > task.deadline:
+                return None
+            return msg_t1, arrival, arrival + net.hp_slot_time
+
+        plan = placement()
+        if plan is None:
+            return HPResult(False)          # can't meet the deadline at all
+        msg_t1, t1, t2 = plan
+
+        if dev.fits(t1, t2, 1):
+            return HPResult(True, self._commit_hp(task, msg_t1, msg_dur, t1, t2))
+
+        if not self.preemption:
+            return HPResult(False)
+
+        # 3. preemption: evict conflicting LP tasks, farthest deadline first
+        preempted: list[Task] = []
+        while not dev.fits(t1, t2, 1):
+            conflicts = [
+                r
+                for r in dev.reservations()
+                if r.overlaps(t1, t2)
+                and isinstance(r.tag, Task)
+                and r.tag.priority == Priority.LOW
+            ]
+            if not conflicts:
+                break
+            victim_res = min(conflicts, key=self._victim_key)
+            victim: Task = victim_res.tag
+            dev.release(victim)
+            victim.state = TaskState.PREEMPTED
+            victim.preempt_count += 1
+            self.metrics.preemptions += 1
+            self.metrics.preempted_by_cores[victim_res.amount] += 1
+            # preemption message to the executing device
+            pre_dur = net.slot(net.msg.preempt)
+            link.reserve_earliest(pre_dur, now, ("preempt", victim.task_id))
+            if self.on_preempt is not None:
+                self.on_preempt(victim)
+            preempted.append(victim)
+            plan = placement()              # link moved; re-derive the window
+            if plan is None:
+                return HPResult(False, preempted=preempted)
+            msg_t1, t1, t2 = plan
+
+        if not dev.fits(t1, t2, 1):
+            return HPResult(False, preempted=preempted)
+
+        alloc = self._commit_hp(task, msg_t1, msg_dur, t1, t2)
+
+        # 4. attempt to reallocate every victim before its deadline
+        reallocs: list[Allocation] = []
+        for victim in preempted:
+            r_wall = _time.perf_counter()
+            re = self._allocate_lp_task(victim, now, victim.deadline)
+            self.metrics.t_realloc.append(_time.perf_counter() - r_wall)
+            if re is not None:
+                victim.state = TaskState.ALLOCATED
+                self.metrics.realloc_success += 1
+                reallocs.append(re)
+            else:
+                victim.state = TaskState.FAILED
+                self.metrics.realloc_failure += 1
+        return HPResult(True, alloc, preempted, reallocs)
+
+    def _victim_key(self, r: Reservation):
+        """Smaller = preferred victim (used with min())."""
+        task: Task = r.tag
+        if self.victim_policy == "weakest_set":
+            return (self._set_health(task), -task.deadline)
+        return (-task.deadline,)
+
+    def _set_health(self, task: Task) -> float:
+        """Fraction of the task's request set still on track to complete."""
+        req = (self._requests.get(task.request_id)
+               if task.request_id is not None else None)
+        if req is None or not req.tasks:
+            return 1.0
+        good = sum(
+            1 for t in req.tasks
+            if t.state in (TaskState.COMPLETED, TaskState.ALLOCATED,
+                           TaskState.RUNNING)
+        )
+        return good / len(req.tasks)
+
+    def _commit_hp(
+        self, task: Task, msg_t1: float, msg_dur: float, t1: float, t2: float
+    ) -> Allocation:
+        net, link = self.net, self.state.link
+        dev = self.state.devices[task.source_device]
+        slots = [link.reserve(msg_t1, msg_t1 + msg_dur, ("hp_alloc", task.task_id))]
+        dev.reserve(t1, t2, 1, task)
+        upd_dur = net.slot(net.msg.state_update)
+        slots.append(link.reserve_earliest(upd_dur, t2, ("update", task.task_id)))
+        task.state = TaskState.ALLOCATED
+        task.device, task.cores = task.source_device, 1
+        task.t_start, task.t_end, task.offloaded = t1, t2, False
+        return Allocation(task, task.source_device, t1, t2, 1, False, slots)
+
+    # ------------------------------------------------------------------ #
+    # Low-priority algorithm                                             #
+    # ------------------------------------------------------------------ #
+    def allocate_low_priority(self, request: LowPriorityRequest, now: float) -> LPResult:
+        t_wall = _time.perf_counter()
+        self.state.gc(now)
+        self._requests[request.request_id] = request     # set-health registry
+        deadline = request.deadline
+        unallocated = [t for t in request.tasks if t.state == TaskState.PENDING]
+        result = LPResult()
+
+        time_points = [now] + self.state.completion_times(now, deadline)
+        for tp in time_points:
+            if not unallocated:
+                break
+            for task in list(unallocated):
+                alloc = self._allocate_lp_task(task, tp, deadline)
+                if alloc is not None:
+                    unallocated.remove(task)
+                    result.allocations.append(alloc)
+            # upgrade pass: try to give every allocated task more cores
+            for alloc in result.allocations:
+                self._try_upgrade(alloc)
+
+        result.failed = unallocated
+        for t in unallocated:
+            t.state = TaskState.FAILED
+        self.metrics.t_lp_alloc.append(_time.perf_counter() - t_wall)
+        return result
+
+    def reallocate(self, task: Task, now: float) -> Optional[Allocation]:
+        """Public reallocation entry (used by runtimes on external preemption)."""
+        r_wall = _time.perf_counter()
+        alloc = self._allocate_lp_task(task, now, task.deadline)
+        self.metrics.t_realloc.append(_time.perf_counter() - r_wall)
+        if alloc is not None:
+            task.state = TaskState.ALLOCATED
+            self.metrics.realloc_success += 1
+        else:
+            task.state = TaskState.FAILED
+            self.metrics.realloc_failure += 1
+        return alloc
+
+    def _allocate_lp_task(
+        self, task: Task, tp: float, deadline: float
+    ) -> Optional[Allocation]:
+        """Partial allocation of one task at the minimum viable config (§4)."""
+        net, link = self.net, self.state.link
+        msg_dur = net.slot(net.msg.lp_alloc)
+        msg_t1 = link.earliest_slot(msg_dur, tp)
+        arrival = msg_t1 + msg_dur
+        cores = net.lp_core_options[0]          # minimum viable config
+        proc = net.lp_slot_time(cores)
+        xfer_dur = net.slot(net.msg.input_transfer)
+
+        # candidate order: source device first, then spread evenly by load
+        source = task.source_device
+        others = sorted(
+            (d for d in self.state.devices if d.device != source),
+            key=lambda d: (d.load(arrival, deadline), d.device),
+        )
+        for dev in [self.state.devices[source]] + others:
+            offloaded = dev.device != source
+            if offloaded:
+                xfer_t1 = link.earliest_slot(xfer_dur, arrival)
+                t1 = xfer_t1 + xfer_dur
+            else:
+                xfer_t1 = 0.0
+                t1 = arrival
+            t2 = t1 + proc
+            if t2 > deadline:
+                continue
+            if not dev.fits(t1, t2, cores):
+                continue
+            # commit
+            slots = [link.reserve(msg_t1, msg_t1 + msg_dur, ("lp_alloc", task.task_id))]
+            if offloaded:
+                slots.append(
+                    link.reserve(xfer_t1, xfer_t1 + xfer_dur, ("xfer", task.task_id))
+                )
+            dev.reserve(t1, t2, cores, task)
+            upd_dur = net.slot(net.msg.state_update)
+            slots.append(link.reserve_earliest(upd_dur, t2, ("update", task.task_id)))
+            task.state = TaskState.ALLOCATED
+            task.device, task.cores = dev.device, cores
+            task.t_start, task.t_end, task.offloaded = t1, t2, offloaded
+            return Allocation(task, dev.device, t1, t2, cores, offloaded, slots)
+        return None
+
+    def _try_upgrade(self, alloc: Allocation) -> bool:
+        """Improve an allocation by raising its core configuration (§4)."""
+        net = self.net
+        options = [c for c in net.lp_core_options if c > alloc.cores]
+        if not options:
+            return False
+        dev = self.state.devices[alloc.device]
+        res = dev.get(alloc.task)
+        if res is None:
+            return False
+        for cores in reversed(options):          # largest improvement first
+            t2 = alloc.t_start + net.lp_slot_time(cores)
+            dev.release(alloc.task)
+            if t2 <= alloc.task.deadline and dev.fits(alloc.t_start, t2, cores):
+                dev.reserve(alloc.t_start, t2, cores, alloc.task)
+                alloc.cores, alloc.t_end = cores, t2
+                alloc.task.cores, alloc.task.t_end = cores, t2
+                return True
+            dev.reserve(res.t1, res.t2, res.amount, alloc.task)
+        return False

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, input_specs, text_len, train_batches  # noqa: F401

@@ -1,0 +1,33 @@
+"""jit'd wrapper: decode attention against the model's cache layout
+([B, S, KV, D] + positions row), GQA-aware."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import decode_attention
+from .ref import decode_attention_ref
+
+
+@partial(jax.jit, static_argnames=("window", "use_pallas", "interpret"))
+def cached_decode_attention(
+    q: jax.Array,            # [B, 1, H, D] (model layout, one token)
+    cache_k: jax.Array,      # [B, S, KV, D]
+    cache_v: jax.Array,
+    positions: jax.Array,    # [B, S]
+    pos,                     # scalar
+    *,
+    window: int = 0,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    q1 = q[:, 0]
+    s = cache_k.shape[1]
+    if use_pallas and s % 128 == 0:
+        o = decode_attention(q1, cache_k, cache_v, positions, pos,
+                             window=window, block_s=128, interpret=interpret)
+    else:
+        o = decode_attention_ref(q1, cache_k, cache_v, positions, pos,
+                                 window=window)
+    return o[:, None]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a
+position-tracked (optionally rotating) KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,               # [B, H, D] one token of queries
+    k_cache: jax.Array,         # [B, S, KV, D]
+    v_cache: jax.Array,
+    positions: jax.Array,       # [B, S] absolute stored positions (-1 empty)
+    pos: jax.Array,             # scalar current position
+    *,
+    window: int = 0,
+) -> jax.Array:
+    b, h, d = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = d ** -0.5
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    valid = (positions >= 0) & (positions <= pos)
+    if window > 0:
+        valid &= positions > pos - window
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

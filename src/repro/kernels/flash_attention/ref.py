@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for blocked causal (optionally windowed) attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  *, causal: bool = True, window: int = 0) -> jax.Array:
+    """q/k/v [B, H, T, D] -> [B, H, T, D] (f32 math)."""
+    t = q.shape[2]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        pos = jnp.arange(t)
+        mask = pos[None, :] <= pos[:, None]
+        if window > 0:
+            mask &= pos[None, :] > pos[:, None] - window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", w, v.astype(jnp.float32)).astype(q.dtype)

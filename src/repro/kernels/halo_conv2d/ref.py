@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the halo-partitioned conv block (paper §3.2).
+
+The paper horizontally partitions YoloV2 conv blocks: the input feature map
+is split into spatial tiles, each tile processed through consecutive conv
+layers with its halo (expansion border), and only tile borders are exchanged
+at block boundaries.  The oracle is a plain SAME-padded conv stack — the
+Pallas kernel must produce identical results for any tiling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_valid(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x [N, H, W, Cin], w [kh, kw, Cin, Cout], stride 1, VALID padding."""
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv_block_ref(x: jax.Array, weights: list[jax.Array],
+                   leaky_slope: float = 0.1) -> jax.Array:
+    """A YoloV2-style block: n consecutive 3x3 convs + leaky ReLU.
+
+    Block-level padding semantics (fused tile partitioning, Zhao et al.
+    DeepThings): the image is zero-padded ONCE by the block's total halo
+    radius and the convs run VALID, so intermediate halo values carry
+    through the block.  This is what makes the result exactly independent
+    of the tiling (the paper's 2-core vs 4-core configurations)."""
+    r = len(weights)
+    x = jnp.pad(x, [(0, 0), (r, r), (r, r), (0, 0)])
+    for w in weights:
+        x = conv2d_valid(x, w)
+        x = jnp.where(x >= 0, x, leaky_slope * x)
+    return x
+
+
+def maxpool2x2_ref(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )

@@ -1,0 +1,5 @@
+from .kernel import slstm_scan
+from .ops import slstm_hidden_states
+from .ref import slstm_scan_ref
+
+__all__ = ["slstm_scan", "slstm_hidden_states", "slstm_scan_ref"]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the sLSTM scan kernel — mirrors
+``repro.models.layers.xlstm._slstm_step`` semantics exactly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slstm_scan_ref(wx: jax.Array, r: jax.Array, b: jax.Array) -> jax.Array:
+    """wx [B,T,4,H,dh], r [4,H,dh,dh], b [4,H,dh] -> hs [B,T,H,dh] f32."""
+    bsz, t, _, h, dh = wx.shape
+    state = (
+        jnp.zeros((bsz, h, dh), jnp.float32),
+        jnp.zeros((bsz, h, dh), jnp.float32),
+        jnp.ones((bsz, h, dh), jnp.float32),
+        jnp.zeros((bsz, h, dh), jnp.float32),
+    )
+    rf = r.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def step(state, wx_t):
+        hh, c, n, m = state
+        rec = jnp.einsum("bhk,ghkj->bghj", hh, rf)
+        pre = wx_t.astype(jnp.float32) + rec + bf
+        i_pre, f_pre, z_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        i_eff = jnp.exp(i_pre - m_new)
+        f_eff = jnp.exp(logf + m - m_new)
+        z = jnp.tanh(z_pre)
+        o = jax.nn.sigmoid(o_pre)
+        c_new = f_eff * c + i_eff * z
+        n_new = jnp.maximum(f_eff * n + i_eff, 1e-6)
+        h_new = o * c_new / n_new
+        return (h_new, c_new, n_new, m_new), h_new
+
+    _, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)                              # [B, T, H, dh]

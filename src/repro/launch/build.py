@@ -1,0 +1,154 @@
+"""Shared combo-building logic for the dry-run and roofline benchmarks.
+
+``lower_combo`` builds the jitted step for one (arch x input-shape x mesh)
+with baseline (or overridden) sharding rules, lowers it against
+ShapeDtypeStruct stand-ins (no allocation) and returns the Lowered object
+plus bookkeeping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import get_config
+from ..configs.shapes import SHAPES, InputShape
+from ..data.pipeline import input_specs, text_len
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..models.head_padding import pad_heads_config
+from ..models.sharding import (
+    RuleSet,
+    batch_spec,
+    cache_batch_rules,
+    tree_shardings,
+)
+from ..training.optimizer import AdamWConfig, init_opt_state
+from ..training.steps import make_prefill_step, make_serve_step, make_train_step
+
+
+def adapt_config(cfg: ModelConfig, shape: InputShape,
+                 dtype: str = "bfloat16") -> ModelConfig:
+    """Apply the shape policy: long_500k switches attention archs to the
+    sliding-window variant (sub-quadratic requirement, DESIGN.md §4)."""
+    cfg = replace(cfg, param_dtype=dtype, activation_dtype=dtype)
+    if shape.name == "long_500k" and cfg.uses_attention:
+        cfg = cfg.with_sliding_window(cfg.long_context_window)
+    return cfg
+
+
+def _batch_shardings(specs: dict, mesh: Mesh, cfg: ModelConfig,
+                     shape: InputShape, ruleset: RuleSet):
+    bspec = batch_spec(mesh, shape.global_batch,
+                       text_len(cfg, shape), ruleset)
+    out = {}
+    for name, sds in specs.items():
+        if sds.ndim == 0:
+            out[name] = NamedSharding(mesh, P())
+        else:
+            dims = [bspec[0], bspec[1] if len(bspec) > 1 else None]
+            dims += [None] * (sds.ndim - 2)
+            out[name] = NamedSharding(mesh, P(*dims[: sds.ndim]))
+    return out
+
+
+@dataclass
+class Combo:
+    arch: str
+    shape: InputShape
+    cfg: ModelConfig
+    lowered: Any
+    chips: int
+    kind: str
+
+
+def decode_cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    if cfg.sliding_window > 0:
+        return min(cfg.sliding_window, shape.seq_len)
+    return shape.seq_len
+
+
+def lower_combo(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    dtype: str = "bfloat16",
+    ruleset: Optional[RuleSet] = None,
+    moe_group_size: int = 256,
+    remat: bool = True,
+    unroll: int | bool = 1,
+    opt: Optional[AdamWConfig] = None,
+    cfg_override: Optional[ModelConfig] = None,
+    pad_heads: int = 0,
+    cfg_updates: Optional[dict] = None,
+) -> Combo:
+    shape = SHAPES[shape_name]
+    cfg = cfg_override or adapt_config(get_config(arch), shape, dtype)
+    if pad_heads:
+        cfg = pad_heads_config(cfg, pad_heads)   # §Perf head-padding variant
+    if cfg_updates:
+        cfg = replace(cfg, **cfg_updates)        # §Perf config knobs
+    ruleset = ruleset or RuleSet()
+    chips = mesh.devices.size
+
+    params_abs = M.abstract_params(cfg)
+    p_axes = M.params_axes(cfg)
+    p_sh = tree_shardings(p_axes, params_abs, mesh, ruleset)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt = opt or AdamWConfig()
+        opt_abs = jax.eval_shape(lambda p: init_opt_state(opt, p), params_abs)
+        o_sh = {
+            "m": tree_shardings(p_axes, opt_abs["m"], mesh, ruleset),
+            "v": tree_shardings(p_axes, opt_abs["v"], mesh, ruleset),
+            "step": NamedSharding(mesh, P()),
+        }
+        b_sh = _batch_shardings(specs, mesh, cfg, shape, ruleset)
+        step = make_train_step(cfg, opt, remat=remat,
+                               moe_group_size=moe_group_size, unroll=unroll)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(params_abs, opt_abs, specs)
+    elif shape.kind == "prefill":
+        b_sh = _batch_shardings(specs, mesh, cfg, shape, ruleset)
+        step = make_prefill_step(cfg, cache_len=shape.seq_len,
+                                 moe_group_size=moe_group_size,
+                                 unroll=unroll)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(params_abs, specs)
+    else:  # decode
+        cache_len = decode_cache_len(cfg, shape)
+        enc_len = shape.seq_len if cfg.is_encoder_decoder else 0
+        caches_abs = M.abstract_caches(cfg, shape.global_batch, cache_len,
+                                       enc_len)
+        c_axes = M.caches_axes(cfg)
+        # head-parallel cache sharding impossible => seq-shard on `model`
+        # (§Perf): MLA's latent cache has no head axis at all; GQA caches
+        # need kv_heads % model == 0.
+        model_sz = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        prefer_seq = (cfg.mla is not None or cfg.n_kv_heads % model_sz != 0)
+        c_rules = cache_batch_rules(mesh, shape.global_batch, ruleset,
+                                    prefer_seq_shard=prefer_seq)
+        c_sh = tree_shardings(c_axes, caches_abs, mesh, c_rules)
+        tok_sh = NamedSharding(
+            mesh, batch_spec(mesh, shape.global_batch, 1, ruleset))
+        step = make_serve_step(cfg, moe_group_size=moe_group_size,
+                               unroll=unroll)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, tok_sh, NamedSharding(mesh, P())),
+            out_shardings=(tok_sh, c_sh),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_abs, caches_abs, specs["token"],
+                               specs["pos"])
+    return Combo(arch, shape, cfg, lowered, chips, shape.kind)

@@ -1,0 +1,138 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record memory / cost / collective analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      --out results/dryrun.jsonl
+
+The XLA_FLAGS line above MUST stay the first statement: jax locks the device
+count on first init, and the dry-run needs 512 placeholder CPU devices.
+"""
+import argparse            # noqa: E402
+import json                # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+
+import jax                 # noqa: E402
+
+from ..configs import ARCH_IDS                      # noqa: E402
+from ..configs.shapes import SHAPES                 # noqa: E402
+from .build import lower_combo                      # noqa: E402
+from .hlo_analysis import analytic_model_flops, roofline_from_compiled  # noqa: E402
+from .mesh import make_production_mesh              # noqa: E402
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            verbose: bool = True, unroll: bool = False, **combo_kw) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "chips": int(mesh.devices.size),
+        "unrolled": unroll,
+    }
+    t0 = time.time()
+    try:
+        with mesh:
+            combo = lower_combo(arch, shape_name, mesh, unroll=unroll,
+                                **combo_kw)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = combo.lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+
+            mem = compiled.memory_analysis()
+            if mem is not None:
+                for attr in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                ):
+                    val = getattr(mem, attr, None)
+                    if val is not None:
+                        rec[attr] = int(val)
+                rec["total_bytes_per_device"] = sum(
+                    rec.get(a, 0)
+                    for a in ("argument_size_in_bytes", "temp_size_in_bytes",
+                              "output_size_in_bytes")
+                )
+            hlo = compiled.as_text()
+            from ..configs.shapes import SHAPES as _SH
+            mf = analytic_model_flops(combo.cfg, _SH[shape_name])
+            roof = roofline_from_compiled(compiled, rec["chips"], hlo, mf)
+            rec["roofline"] = roof.summary()
+            rec["status"] = "ok"
+    except Exception as e:                            # noqa: BLE001
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    if verbose:
+        status = rec["status"]
+        extra = (
+            f"bottleneck={rec['roofline']['bottleneck']}"
+            if status == "ok" else rec.get("error", "")[:120]
+        )
+        print(f"[dryrun] {arch:24s} {shape_name:12s} "
+              f"mesh={rec['mesh']:8s} {status:4s} "
+              f"({rec['total_s']:.0f}s) {extra}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer scans (exact cost analysis, slow)")
+    ap.add_argument("--dtype", default="bfloat16",
+                    help="float32 avoids the CPU backend's bf16->f32 "
+                    "emulation converts (roofline methodology runs)")
+    ap.add_argument("--baseline", action="store_true",
+                    help="paper-faithful divisibility-only sharding "
+                    "(disables the §Perf seq-shard cache fallback)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    combos: list[tuple[str, str, bool]] = []
+    # explicit --arch/--shape filters always win; --all (or omission)
+    # sweeps the unfiltered axis
+    archs = (args.arch,) if args.arch else ARCH_IDS
+    shapes = (args.shape,) if args.shape else tuple(SHAPES)
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                combos.append((a, s, mp))
+
+    out_f = open(args.out, "a") if args.out else None
+    from ..models.sharding import RuleSet                 # noqa: E402
+    ruleset = RuleSet(seq_shard_cache_fallback=not args.baseline)
+    n_ok = 0
+    for arch, shape, mp in combos:
+        rec = run_one(arch, shape, mp, unroll=args.unroll,
+                      dtype=args.dtype, ruleset=ruleset)
+        rec["dtype"] = args.dtype
+        rec["baseline_rules"] = args.baseline
+        n_ok += rec["status"] == "ok"
+        if out_f:
+            slim = {k: v for k, v in rec.items() if k != "traceback"}
+            out_f.write(json.dumps(slim) + "\n")
+            out_f.flush()
+    print(f"[dryrun] {n_ok}/{len(combos)} combos compiled OK")
+    if n_ok != len(combos):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

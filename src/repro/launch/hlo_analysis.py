@@ -1,0 +1,210 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+memory term     = HLO_bytes / (chips * HBM_bw)
+collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis`` provides FLOPs/bytes.  IMPORTANT (measured, see
+EXPERIMENTS.md methodology): the compiled module is the per-device SPMD
+program, so cost_analysis FLOPs/bytes are already per-chip — i.e. they equal
+HLO_FLOPs/chips in the formulas above.  We therefore divide by the per-chip
+peak only.  Equally important: XLA cost analysis counts a while-loop body
+ONCE, so the layer scan must be lowered with unroll=True for roofline runs
+(the plain dry-run keeps the scan for fast compile proofs).  Collective bytes are parsed from the
+optimized HLO text (``compiled.as_text()``): for every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction we
+take its *result* shape and convert to per-link wire bytes with the standard
+ring/bidirectional formulas (documented per-op below), using the replica
+group size parsed from the instruction.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e hardware constants (per the brief).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# NOTE: tuple result types of fused collectives contain `/*index=N*/`
+# comments (which include `=`), so the tuple branch must be `\([^)]*\)`
+# (HLO shape tuples never nest parentheses) — an earlier `[^=]*?` version
+# silently dropped every >5-element fused gradient all-reduce.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{(.*?)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))          # [num_groups, group_size]
+    m = _GROUPS_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _SRC_TGT_RE.search(line)
+    if m:
+        return 2
+    return 2
+
+
+@dataclass
+class CollectiveStats:
+    # wire bytes crossing links, per collective kind
+    by_kind: dict = field(default_factory=dict)
+    count: int = 0
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum per-link wire bytes of every collective in the optimized HLO."""
+    stats = CollectiveStats()
+    seen_done: set = set()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m is None:
+            continue
+        # async pairs appear as -start/-done; count once (the -start)
+        if "-done(" in line:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        n = max(2, _group_size(line))
+        if kind == "all-gather":
+            wire = size * (n - 1) / n           # result is the gathered size
+        elif kind == "all-reduce":
+            wire = 2 * size * (n - 1) / n       # reduce-scatter + all-gather
+        elif kind == "reduce-scatter":
+            wire = size * (n - 1)               # result is the scattered size
+        elif kind == "all-to-all":
+            wire = size * (n - 1) / n
+        else:                                   # collective-permute
+            wire = size
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + wire
+        stats.count += 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per-device (SPMD module) FLOPs
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device collective wire bytes
+    chips: int
+    collectives: dict = field(default_factory=dict)
+    n_collectives: int = 0
+    model_flops: float = 0.0     # analytic 6ND-style global model FLOPs
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per-chip basis) — catches remat /
+        dispatch / recompute waste.  < 1 means the compiled program does
+        more raw FLOPs than the model math requires."""
+        if not self.flops:
+            return 0.0
+        return (self.model_flops / self.chips) / self.flops
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    def summary(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "n_collectives": self.n_collectives,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "collectives_by_kind": self.collectives,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int,
+                           hlo_text: str | None = None,
+                           model_flops: float = 0.0) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    stats = collective_bytes(text)
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=stats.total_bytes,
+        chips=chips,
+        collectives=stats.by_kind,
+        n_collectives=stats.count,
+        model_flops=model_flops,
+    )
+
+
+def analytic_model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS per the brief: 6*N*D for training (N = active non-embed
+    params), 2*N*D for prefill, 2*N per generated token for decode."""
+    n_active = cfg.param_count(active_only=True)
+    n_active -= cfg.padded_vocab * cfg.d_model 
+    if not cfg.tie_embeddings:
+        n_active -= cfg.padded_vocab * cfg.d_model
+    n_active = max(n_active, 1)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # one token per sequence

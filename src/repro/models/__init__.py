@@ -1,0 +1,10 @@
+from .config import (  # noqa: F401
+    LayerDef,
+    MambaConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    StageDef,
+    XLSTMConfig,
+)
+from . import blocks, model, sharding  # noqa: F401

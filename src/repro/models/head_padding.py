@@ -1,0 +1,144 @@
+"""Head padding for TPU-friendly attention sharding (§Perf, DESIGN.md §5).
+
+Several assigned archs have head counts that don't divide the model mesh
+axis (llava 56q/8kv, qwen2 14q/2kv, smollm 9q/3kv on model=16), so the
+baseline divisibility rules *replicate* all attention weights and the KV
+cache — for decode that makes attention weights the dominant per-device HBM
+stream and invites GSPMD to invent catastrophic cache re-shards.
+
+The fix is the standard TPU trick: pad the head axes so they divide the
+mesh —
+
+  kv' = lcm(n_kv_heads, multiple)      (each orig kv head duplicated
+                                        r = kv'/n_kv_heads times)
+  g   = n_heads // n_kv_heads          (GQA group)
+  g'  = ceil(g / r)                    (queries per padded kv slot)
+  h'  = kv' * g'
+
+Padded kv slot ``j`` holds a copy of original kv head ``j // r``; its query
+slots ``l in [0, g')`` hold original query head ``(j//r)*g + (j%r)*g' + l``
+(zero-weights when that index walks off the original group).  Because the
+padded wq rows AND the matching wo rows are zero, the transformed model is
+numerically identical to the original (the uniform softmax a zero query
+produces is annihilated by the zero output-projection row).
+
+``pad_heads_config`` transforms the config (for abstract lowering);
+``pad_attn_params`` transforms real parameter trees (so serving engines can
+load unpadded checkpoints); both are validated for exact equivalence in
+tests/test_head_padding.py.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def padded_head_counts(n_heads: int, n_kv_heads: int,
+                       multiple: int) -> tuple[int, int]:
+    """(h', kv') after padding so ``multiple | kv'`` and ``multiple | h'``."""
+    kv_p = math.lcm(n_kv_heads, multiple)
+    r = kv_p // n_kv_heads
+    g = n_heads // n_kv_heads
+    g_p = -(-g // r)                     # ceil
+    return kv_p * g_p, kv_p
+
+
+def pad_heads_config(cfg: ModelConfig, multiple: int) -> ModelConfig:
+    """Padded-head variant of ``cfg`` (no-op if already divisible or MLA)."""
+    if cfg.mla is not None:
+        return cfg                        # MLA shares one latent cache
+    if cfg.n_heads % multiple == 0 and cfg.n_kv_heads % multiple == 0:
+        return cfg
+    if cfg.n_heads % cfg.n_kv_heads != 0:
+        return cfg
+    h_p, kv_p = padded_head_counts(cfg.n_heads, cfg.n_kv_heads, multiple)
+    return replace(cfg, n_heads=h_p, n_kv_heads=kv_p,
+                   head_dim=cfg.resolved_head_dim)
+
+
+def _q_slot_map(h: int, kv: int, h_p: int, kv_p: int) -> list[int]:
+    """padded q slot -> original q head index (or -1 for a zero slot)."""
+    r = kv_p // kv
+    g = h // kv
+    g_p = h_p // kv_p
+    out = []
+    for j in range(kv_p):
+        i, c = divmod(j, r)
+        for l in range(g_p):
+            src = c * g_p + l
+            out.append(i * g + src if src < g else -1)
+    return out
+
+def _pad_attn_leaf_dict(p: dict, h: int, kv: int, h_p: int, kv_p: int,
+                        hd: int) -> dict:
+    """Pad one attention param dict {wq, wk, wv, wo[, bq, bk, bv]}.
+
+    Leading (stacked-layer) axes are preserved; head axes are addressed
+    from the right.
+    """
+    r = kv_p // kv
+    qmap = _q_slot_map(h, kv, h_p, kv_p)
+    out = dict(p)
+
+    def pad_q(w):                         # [..., d, h, hd] -> [..., d, h', hd]
+        base = jnp.zeros(w.shape[:-2] + (h_p, hd), w.dtype)
+        cols = [base[..., s, :] if src < 0 else w[..., src, :]
+                for s, src in enumerate(qmap)]
+        return jnp.stack(cols, axis=-2)
+
+    def pad_q_bias(b):                    # [..., h, hd] -> [..., h', hd]
+        zero = jnp.zeros(b.shape[:-2] + (hd,), b.dtype)
+        cols = [zero if src < 0 else b[..., src, :] for src in qmap]
+        return jnp.stack(cols, axis=-2)
+
+    out["wq"] = pad_q(p["wq"])
+    out["wk"] = jnp.repeat(p["wk"], r, axis=-2)
+    out["wv"] = jnp.repeat(p["wv"], r, axis=-2)
+    # wo [..., h*hd, d] -> unflatten, place rows per qmap, reflatten
+    wo = p["wo"]
+    wo_h = wo.reshape(wo.shape[:-2] + (h, hd, wo.shape[-1]))
+    zero_row = jnp.zeros(wo_h.shape[:-3] + (hd, wo.shape[-1]), wo.dtype)
+    rows = [zero_row if src < 0 else wo_h[..., src, :, :] for src in qmap]
+    out["wo"] = jnp.stack(rows, axis=-3).reshape(
+        wo.shape[:-2] + (h_p * hd, wo.shape[-1]))
+    if "bq" in p:
+        out["bq"] = pad_q_bias(p["bq"])
+        out["bk"] = jnp.repeat(p["bk"], r, axis=-2)
+        out["bv"] = jnp.repeat(p["bv"], r, axis=-2)
+    return out
+
+
+def pad_attn_params(params, cfg: ModelConfig, cfg_p: ModelConfig):
+    """Transform an unpadded parameter tree to the padded-head layout."""
+    if cfg_p.n_heads == cfg.n_heads and cfg_p.n_kv_heads == cfg.n_kv_heads:
+        return params
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    h_p, kv_p = cfg_p.n_heads, cfg_p.n_kv_heads
+    hd = cfg.resolved_head_dim
+    out = jax.tree_util.tree_map(lambda x: x, params)   # shallow copy tree
+
+    def visit(stage_params, stage):
+        sp = dict(stage_params)
+        for i, ld in enumerate(stage.pattern):
+            lp = dict(sp[f"p{i}"])
+            if ld.mixer == "attn":
+                lp["mixer"] = _pad_attn_leaf_dict(lp["mixer"], h, kv,
+                                                  h_p, kv_p, hd)
+            if ld.cross_attn:
+                lp["cross"] = _pad_attn_leaf_dict(lp["cross"], h, kv,
+                                                  h_p, kv_p, hd)
+            sp[f"p{i}"] = lp
+        return sp
+
+    for i, st in enumerate(cfg.stages):
+        out[f"dec{i}"] = visit(out[f"dec{i}"], st)
+    for i, st in enumerate(cfg.encoder_stages):
+        key = f"enc{i}"
+        if key in out:
+            out[key] = visit(out[key], st)
+    return out

@@ -1,0 +1,1 @@
+from . import attention, common, ffn, mamba, mla, xlstm  # noqa: F401

@@ -1,0 +1,119 @@
+"""Shared primitives: norms, RoPE, initialisers, logical-axis helpers.
+
+Every ``*_init`` function has a mirror ``*_axes`` function returning the same
+tree structure with logical-axis name tuples instead of arrays; sharding.py
+maps logical axes onto mesh axes with divisibility-checked rules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------- #
+# Initialisers                                                                #
+# --------------------------------------------------------------------------- #
+
+
+def normal_init(key, shape, scale: float, dtype) -> jax.Array:
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def dense_init(key, in_dim: int, *out_dims: int, dtype) -> jax.Array:
+    """Fan-in scaled normal for a [in, *out] projection."""
+    return normal_init(key, (in_dim, *out_dims), in_dim ** -0.5, dtype)
+
+
+def zeros(shape, dtype) -> jax.Array:
+    return jnp.zeros(shape, dtype=dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Norms                                                                       #
+# --------------------------------------------------------------------------- #
+
+
+def rmsnorm_init(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm_axes(axis: str = "embed") -> dict:
+    return {"scale": (axis,)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def groupnorm_heads(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Per-head group norm over the last (head_dim) axis, no learned params."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mean) * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE                                                                        #
+# --------------------------------------------------------------------------- #
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies [head_dim // 2]."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """positions [...,] -> cos/sin tables [..., head_dim // 2]."""
+    angles = positions.astype(jnp.float32)[..., None] * rope_freqs(head_dim, theta)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., T, H, D]; cos/sin [T, D/2] (broadcast over batch and heads)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    # cos/sin [T, D/2] -> [T, 1, D/2] so they broadcast over the head axis.
+    cos = cos[..., :, None, :]
+    sin = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Activations                                                                 #
+# --------------------------------------------------------------------------- #
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return silu(gate) * up
+
+
+# --------------------------------------------------------------------------- #
+# Stable helpers                                                              #
+# --------------------------------------------------------------------------- #
+
+
+def softmax_f32(scores: jax.Array, axis: int = -1) -> jax.Array:
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=axis)
+
+
+def masked_softmax(scores: jax.Array, mask: jax.Array, axis: int = -1) -> jax.Array:
+    """Softmax with additive -inf masking; rows with no valid key yield 0."""
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask, scores.astype(jnp.float32), neg)
+    out = jax.nn.softmax(scores, axis=axis)
+    # If an entire row is masked the softmax is garbage; zero it.
+    any_valid = jnp.any(mask, axis=axis, keepdims=True)
+    return jnp.where(any_valid, out, 0.0)

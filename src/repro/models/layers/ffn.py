@@ -1,0 +1,149 @@
+"""Dense SwiGLU FFN and Mixture-of-Experts with capacity-based dispatch.
+
+MoE follows the GShard/Switch group-wise dispatch adapted for TPU: tokens are
+split into groups of ``group_size``; each group routes top-k with per-group
+expert capacity C = ceil(k * group_size / E * capacity_factor).  Dispatch and
+combine are einsums against a [G, T, E, C] one-hot — this shards cleanly on
+(data x model) meshes and keeps the HLO static.  Overflow tokens fall through
+to the residual (plus shared experts when present).
+
+Routers: "softmax" (classic) or "sigmoid" (DeepSeek-V3 style scores with
+top-k renormalisation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig, MoEConfig
+from .common import dense_init, swiglu
+
+
+# --------------------------------------------------------------------------- #
+# Dense FFN                                                                   #
+# --------------------------------------------------------------------------- #
+
+
+def ffn_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(kg, d_model, d_ff, dtype=dtype),
+        "wu": dense_init(ku, d_model, d_ff, dtype=dtype),
+        "wd": dense_init(kd, d_ff, d_model, dtype=dtype),
+    }
+
+
+def ffn_axes() -> dict:
+    return {"wg": ("embed", "ff"), "wu": ("embed", "ff"), "wd": ("ff", "embed")}
+
+
+def ffn_apply(params: dict, x: jax.Array) -> jax.Array:
+    gate = jnp.einsum("btd,df->btf", x, params["wg"])
+    up = jnp.einsum("btd,df->btf", x, params["wu"])
+    return jnp.einsum("btf,fd->btd", swiglu(gate, up), params["wd"])
+
+
+# --------------------------------------------------------------------------- #
+# MoE                                                                         #
+# --------------------------------------------------------------------------- #
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.moe
+    assert m is not None
+    d, f, e = cfg.d_model, m.d_expert, m.n_experts
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "router": dense_init(kr, d, e, dtype=jnp.float32),   # router in f32
+        "wg": (scale * jax.random.normal(kg, (e, d, f))).astype(dtype),
+        "wu": (scale * jax.random.normal(ku, (e, d, f))).astype(dtype),
+        "wd": (f ** -0.5 * jax.random.normal(kd, (e, f, d))).astype(dtype),
+    }
+    if m.n_shared:
+        p["shared"] = ffn_init(ks, d, m.d_expert * m.n_shared, dtype)
+    return p
+
+
+def moe_axes(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    assert m is not None
+    a = {
+        "router": ("embed", "experts"),
+        "wg": ("experts", "embed", "expert_ff"),
+        "wu": ("experts", "embed", "expert_ff"),
+        "wd": ("experts", "expert_ff", "embed"),
+    }
+    if m.n_shared:
+        a["shared"] = ffn_axes()
+    return a
+
+
+def _route(m: MoEConfig, logits: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """logits [..., E] -> (topk_weight [..., k], topk_idx [..., k], probs)."""
+    if m.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        w, idx = jax.lax.top_k(scores, m.top_k)
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-9)
+        probs = scores / (jnp.sum(scores, axis=-1, keepdims=True) + 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, m.top_k)
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-9)
+    return w, idx, probs
+
+
+def moe_apply(
+    params: dict,
+    x: jax.Array,                    # [B, T, d]
+    cfg: ModelConfig,
+    group_size: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B,T,d], aux_loss scalar)."""
+    m = cfg.moe
+    assert m is not None
+    b, t, d = x.shape
+    n_tok = b * t
+    g_sz = min(group_size, n_tok)
+    # pad token count to a multiple of the group size
+    n_pad = (-n_tok) % g_sz
+    flat = x.reshape(n_tok, d)
+    if n_pad:
+        flat = jnp.concatenate([flat, jnp.zeros((n_pad, d), x.dtype)], axis=0)
+    g = flat.shape[0] // g_sz
+    xg = flat.reshape(g, g_sz, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg, params["router"].astype(xg.dtype))
+    weights, idx, probs = _route(m, logits.astype(jnp.float32))
+
+    e = m.n_experts
+    cap = max(1, int(m.top_k * g_sz / e * m.capacity_factor + 0.9999))
+
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)          # [g,t,k,E]
+    # position of each (token, k) within its expert's buffer, scan over tokens
+    pos = jnp.cumsum(onehot.reshape(g, g_sz * m.top_k, e), axis=1) - 1.0
+    pos = pos.reshape(g, g_sz, m.top_k, e)
+    keep = (pos < cap) & (onehot > 0)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    dispatch = jnp.einsum("gtke,gtkec->gtec", onehot * keep, pos_oh)
+    combine = jnp.einsum("gtk,gtke,gtkec->gtec", weights, onehot * keep, pos_oh)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(xg.dtype), xg)
+    h = swiglu(
+        jnp.einsum("gecd,edf->gecf", xe, params["wg"]),
+        jnp.einsum("gecd,edf->gecf", xe, params["wu"]),
+    )
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wd"])
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(xg.dtype), ye)
+
+    y = y.reshape(-1, d)[:n_tok].reshape(b, t, d)
+
+    # Switch-style load balance aux loss: E * sum_e f_e * p_e
+    frac = jnp.mean(onehot[..., 0, :] if m.top_k == 1 else onehot.sum(2), axis=(0, 1))
+    frac = frac / m.top_k
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = m.n_experts * jnp.sum(frac * pmean) * m.router_aux_weight
+
+    if m.n_shared:
+        y = y + ffn_apply(params["shared"], x)
+    return y, aux

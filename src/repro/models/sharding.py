@@ -1,0 +1,203 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallback.
+
+Baseline (paper-faithful floor, "divisibility-driven"): every parameter
+shards its tensor-parallel-able axis on ``model`` and its embed axis on
+``data`` (FSDP) *iff* the dimension is divisible by the mesh axis size;
+otherwise that axis is replicated.  Activations shard batch on
+``(pod, data)``; decode caches shard batch on ``(pod, data)`` and heads /
+d_inner on ``model``; for long_500k (batch 1) caches shard the *sequence*
+slot axis on ``data``.
+
+The optimized variants (§Perf) override individual rules — see
+``RuleSet`` fields.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical axis -> preferred mesh axis (None = replicate).
+BASE_RULES: dict[str, Optional[str]] = {
+    "vocab": "model",
+    "embed": "data",            # FSDP weight shard
+    "embed2": None,
+    "ff": "model",
+    "expert_ff": "model",
+    "experts": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "heads_flat": "model",
+    "head_dim": None,
+    "head_dim2": None,
+    "modality": None,
+    "layers": None,             # scan axis, never sharded
+    "q_rank": None,
+    "kv_rank": None,
+    "kv_rank_rope": None,
+    "rope_dim": None,
+    "d_inner": "model",
+    "d_inner2": "model",
+    "dt_state": None,
+    "dt_rank": None,
+    "state": None,
+    "conv": None,
+    "gates": None,
+    # activations / caches
+    "batch": ("pod", "data"),
+    "seq": None,
+    "cache": None,
+}
+
+
+@dataclass(frozen=True)
+class RuleSet:
+    """Sharding policy knobs (baseline + §Perf overrides)."""
+
+    rules: dict = field(default_factory=lambda: dict(BASE_RULES))
+    # decode/batch==1: shard cache sequence axis on data
+    shard_cache_seq_when_b1: bool = True
+    # activations: shard sequence on data when batch < data-axis size
+    shard_seq_when_small_batch: bool = True
+    # §Perf (measured, EXPERIMENTS.md): when a decode cache cannot shard its
+    # head axis on `model` (kv_heads % model != 0, or MLA's head-less latent
+    # cache), shard the cache *sequence* axis on `model` instead of
+    # replicating.  Replication invites GSPMD to re-shard + all-gather the
+    # whole cache every step (llava decode_32k: 112.7 GB/step wire).
+    # False reproduces the paper-faithful divisibility-only baseline.
+    seq_shard_cache_fallback: bool = True
+
+    def with_overrides(self, **over) -> "RuleSet":
+        r = dict(self.rules)
+        r.update(over)
+        return replace(self, rules=r)
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _axis_size(mesh_sizes: dict, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh_sizes.get(a, 1) for a in axis]))
+    return mesh_sizes.get(axis, 1)
+
+
+def spec_for(
+    axes: tuple,
+    shape: tuple,
+    mesh: Mesh,
+    ruleset: RuleSet,
+) -> P:
+    """Build a PartitionSpec for one leaf, checking divisibility per axis."""
+    sizes = _mesh_axis_sizes(mesh)
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, axes):
+        axis = ruleset.rules.get(name)
+        if axis is None:
+            out.append(None)
+            continue
+        # drop mesh axes not present in this mesh (e.g. 'pod' on single pod)
+        if isinstance(axis, tuple):
+            axis = tuple(a for a in axis if a in sizes)
+            if not axis:
+                out.append(None)
+                continue
+            flat: tuple = axis
+        else:
+            if axis not in sizes:
+                out.append(None)
+                continue
+            flat = (axis,)
+        if any(a in used for a in flat):
+            out.append(None)
+            continue
+        if dim % _axis_size(sizes, axis) != 0:
+            out.append(None)            # divisibility fallback: replicate
+            continue
+        used.update(flat)
+        out.append(axis if not isinstance(axis, tuple) else axis)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_shardings(
+    tree_axes,
+    tree_shapes,          # pytree of ShapeDtypeStruct (or arrays)
+    mesh: Mesh,
+    ruleset: Optional[RuleSet] = None,
+):
+    """Map (axes tree, abstract tree) -> tree of NamedShardings."""
+    ruleset = ruleset or RuleSet()
+
+    def one(axes, leaf):
+        return NamedSharding(mesh, spec_for(axes, leaf.shape, mesh, ruleset))
+
+    return jax.tree.map(
+        one, tree_axes, tree_shapes,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(x, (str, type(None))) for x in v),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Activation shardings                                                        #
+# --------------------------------------------------------------------------- #
+
+
+def batch_spec(mesh: Mesh, global_batch: int, seq_len: int,
+               ruleset: Optional[RuleSet] = None) -> P:
+    """Sharding for [B, T] token arrays (and [B, T, ...] activations)."""
+    ruleset = ruleset or RuleSet()
+    sizes = _mesh_axis_sizes(mesh)
+    rule = ruleset.rules.get("batch", ("pod", "data"))
+    if rule is None:
+        rule = ()
+    elif isinstance(rule, str):
+        rule = (rule,)
+    dp_axes = tuple(a for a in rule if a in sizes)
+    dp = int(np.prod([sizes[a] for a in dp_axes]))
+    if global_batch % dp == 0:
+        return P(dp_axes, None)
+    if ruleset.shard_seq_when_small_batch and seq_len % dp == 0:
+        return P(None, dp_axes)
+    # fall back: shard over the largest dividing prefix of dp axes
+    for k in range(len(dp_axes), 0, -1):
+        sub = dp_axes[:k]
+        if global_batch % _axis_size(sizes, sub) == 0:
+            return P(sub, None)
+    return P(None, None)
+
+
+def cache_batch_rules(mesh: Mesh, global_batch: int,
+                      ruleset: Optional[RuleSet] = None,
+                      prefer_seq_shard: bool = False) -> RuleSet:
+    """Decode-cache ruleset: when batch can't use the data axis (B=1
+    long-context), shard the cache slot axis on data instead.
+
+    ``prefer_seq_shard`` (§Perf default, see RuleSet.seq_shard_cache_fallback)
+    shards the cache sequence axis on `model` when the caller determined the
+    head axis can't be — measured 34.6x / 7.0x dominant-term wins on
+    llava/deepseek-v3 decode_32k."""
+    ruleset = ruleset or RuleSet()
+    sizes = _mesh_axis_sizes(mesh)
+    dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    dp = int(np.prod([sizes[a] for a in dp_axes]))
+    if global_batch % dp == 0:
+        out = ruleset.with_overrides(batch=dp_axes)
+        if (prefer_seq_shard and ruleset.seq_shard_cache_fallback
+                and ruleset.rules.get("cache") is None
+                and "model" in sizes):
+            out = out.with_overrides(cache="model")
+        return out
+    if ruleset.shard_cache_seq_when_b1:
+        return ruleset.with_overrides(batch=None, cache="data")
+    return ruleset.with_overrides(batch=None, cache=None)

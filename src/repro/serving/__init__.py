@@ -1,0 +1,2 @@
+from .cost_model import CostModel, PhaseCost, analytic_cost_model, measure_cost_model  # noqa: F401
+from .engine import PreemptiveServingEngine, ServeRequest, engine_network_config  # noqa: F401

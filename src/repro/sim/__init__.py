@@ -1,0 +1,13 @@
+from .events import EventQueue
+from .traces import TraceConfig, generate_trace, potential_counts
+from .experiment import ScenarioConfig, run_scenario, SCENARIOS
+
+__all__ = [
+    "EventQueue",
+    "TraceConfig",
+    "generate_trace",
+    "potential_counts",
+    "ScenarioConfig",
+    "run_scenario",
+    "SCENARIOS",
+]

@@ -1,0 +1,100 @@
+"""Step factories: train_step / prefill_step / serve_step.
+
+These are the functions the launcher jits with in/out shardings; they are
+also used directly (unjitted or single-device jitted) by the smoke tests and
+examples.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ModelConfig
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Mean next-token CE; positions with label < 0 are masked.  Padded
+    vocab tail can never be a label (labels < vocab_size), so no extra
+    masking of logits is needed for the loss."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *, remat: bool = True,
+            moe_group_size: int = 256,
+            unroll: int | bool = 1) -> tuple[jax.Array, dict]:
+    logits, aux = M.forward(params, cfg, batch, remat=remat,
+                            moe_group_size=moe_group_size, unroll=unroll)
+    # For multimodal decoder-only archs the modality tokens are prepended;
+    # only text positions carry labels.
+    t_text = batch["labels"].shape[1]
+    logits = logits[:, -t_text:, :]
+    ce = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt: Optional[AdamWConfig] = None,
+    *,
+    remat: bool = True,
+    moe_group_size: int = 256,
+    unroll: int | bool = 1,
+) -> Callable:
+    opt = opt or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=remat,
+                              moe_group_size=moe_group_size, unroll=unroll),
+            has_aux=True,
+        )(params)
+        params, opt_state, om = adamw_update(opt, params, grads, opt_state)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int, *,
+                      moe_group_size: int = 256,
+                      unroll: int | bool = 1) -> Callable:
+    def prefill_step(params, batch):
+        logits, caches = M.prefill(params, cfg, batch, cache_len,
+                                   moe_group_size=moe_group_size,
+                                   unroll=unroll)
+        next_token = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+        return next_token.astype(jnp.int32), caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, moe_group_size: int = 256,
+                    unroll: int | bool = 1) -> Callable:
+    """ONE new token against the KV/state caches (the decode shapes)."""
+
+    def serve_step(params, caches, token, pos):
+        logits, caches = M.decode_step(params, cfg, caches, token, pos,
+                                       moe_group_size=moe_group_size,
+                                       unroll=unroll)
+        next_token = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+        return next_token.astype(jnp.int32)[:, None], caches
+
+    return serve_step
+
+
+def init_train_state(cfg: ModelConfig, key, opt: Optional[AdamWConfig] = None):
+    opt = opt or AdamWConfig()
+    params = M.init_params(cfg, key)
+    return params, init_opt_state(opt, params)

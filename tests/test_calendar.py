@@ -1,0 +1,94 @@
+"""Calendar invariants: unit + hypothesis property tests."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.calendar import DeviceCalendar, LinkCalendar, NetworkState
+
+
+def test_link_earliest_slot_empty():
+    link = LinkCalendar()
+    assert link.earliest_slot(1.0, 5.0) == 5.0
+
+
+def test_link_slots_never_overlap_sequential():
+    link = LinkCalendar()
+    r1 = link.reserve_earliest(1.0, 0.0)
+    r2 = link.reserve_earliest(1.0, 0.0)
+    r3 = link.reserve_earliest(0.5, 0.0)
+    res = sorted([r1, r2, r3], key=lambda r: r.t1)
+    for a, b in zip(res, res[1:]):
+        assert a.t2 <= b.t1 + 1e-9
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.floats(0.01, 5.0),     # duration
+            st.floats(0.0, 20.0),     # not_before
+        ),
+        min_size=1,
+        max_size=30,
+    )
+)
+def test_link_no_overlap_property(requests):
+    """No two link reservations ever overlap, regardless of request order."""
+    link = LinkCalendar()
+    for dur, nb in requests:
+        link.reserve_earliest(dur, nb)
+    res = sorted(link._res, key=lambda r: r.t1)
+    for a, b in zip(res, res[1:]):
+        assert a.t2 <= b.t1 + 1e-9
+    # and every reservation respects its not_before
+    assert len(res) == len(requests)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.floats(0.0, 50.0),              # t1
+            st.floats(0.1, 10.0),              # duration
+            st.integers(1, 4),                 # cores
+        ),
+        min_size=1,
+        max_size=40,
+    )
+)
+def test_device_capacity_property(reqs):
+    """fits() + reserve() never exceeds device capacity at any instant."""
+    dev = DeviceCalendar(0, capacity=4)
+    admitted = []
+    for i, (t1, dur, cores) in enumerate(reqs):
+        if dev.fits(t1, t1 + dur, cores):
+            dev.reserve(t1, t1 + dur, cores, tag=i)
+            admitted.append((t1, t1 + dur, cores))
+    # sweep-line over all admitted intervals
+    events = []
+    for t1, t2, c in admitted:
+        events.append((t1, c))
+        events.append((t2, -c))
+    events.sort()
+    cur = 0
+    for _, delta in events:
+        cur += delta
+        assert cur <= 4
+
+
+def test_device_release_and_truncate():
+    dev = DeviceCalendar(0, capacity=4)
+    dev.reserve(0.0, 10.0, 4, tag="a")
+    assert not dev.fits(5.0, 6.0, 1)
+    dev.truncate("a", 5.0)
+    assert dev.fits(5.0, 6.0, 4)
+    dev.release("a")
+    assert dev.fits(0.0, 10.0, 4)
+
+
+def test_completion_times_sorted_unique():
+    state = NetworkState(2)
+    state.devices[0].reserve(0.0, 3.0, 2, "x")
+    state.devices[1].reserve(0.0, 3.0, 2, "y")
+    state.devices[0].reserve(1.0, 4.0, 2, "z")
+    pts = state.completion_times(0.0, 10.0)
+    assert pts == sorted(set(pts)) == [3.0, 4.0]

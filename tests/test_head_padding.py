@@ -1,0 +1,106 @@
+"""Head-padding (§Perf) equivalence: the padded-head model is numerically
+identical to the original — zero padded-query rows are annihilated by zero
+output-projection rows, and duplicated kv heads reproduce the original GQA
+grouping exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.models.head_padding import (
+    _q_slot_map,
+    pad_attn_params,
+    pad_heads_config,
+    padded_head_counts,
+)
+
+
+def _gqa_cfg():
+    # h=6, kv=2, group=3; pad to multiple 4 -> kv'=4, r=2, g'=2, h'=8
+    cfg = get_smoke_config("llava-next-34b")
+    from dataclasses import replace
+    return replace(cfg, n_heads=6, n_kv_heads=2,
+                   head_dim=cfg.resolved_head_dim)
+
+
+def test_padded_head_counts():
+    assert padded_head_counts(56, 8, 16) == (64, 16)
+    assert padded_head_counts(14, 2, 16) == (16, 16)
+    assert padded_head_counts(9, 3, 16) == (48, 48)
+    assert padded_head_counts(6, 2, 4) == (8, 4)
+
+
+def test_q_slot_map_covers_all_heads():
+    for (h, kv, mult) in [(56, 8, 16), (14, 2, 16), (6, 2, 4), (9, 3, 16)]:
+        h_p, kv_p = padded_head_counts(h, kv, mult)
+        qmap = _q_slot_map(h, kv, h_p, kv_p)
+        assert len(qmap) == h_p
+        used = [s for s in qmap if s >= 0]
+        assert sorted(used) == list(range(h))       # each orig head once
+        # every valid q slot attends a copy of its original kv head
+        r, g, g_p = kv_p // kv, h // kv, h_p // kv_p
+        for slot, src in enumerate(qmap):
+            if src >= 0:
+                assert (slot // g_p) // r == src // g
+
+
+@pytest.mark.parametrize("mult", [4, 8])
+def test_forward_equivalence(mult):
+    cfg = _gqa_cfg()
+    cfg_p = pad_heads_config(cfg, mult)
+    assert cfg_p.n_heads % mult == 0 and cfg_p.n_kv_heads % mult == 0
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    params_p = pad_attn_params(params, cfg, cfg_p)
+
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                     cfg.vocab_size),
+        "modality_emb": jax.random.normal(
+            jax.random.PRNGKey(2), (2, cfg.n_modality_tokens,
+                                    cfg.modality_embed_dim), jnp.float32),
+    }
+    logits, _ = M.forward(params, cfg, batch)
+    logits_p, _ = M.forward(params_p, cfg_p, batch)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_p),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_equivalence():
+    cfg = _gqa_cfg()
+    cfg_p = pad_heads_config(cfg, 4)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    params_p = pad_attn_params(params, cfg, cfg_p)
+
+    prompt = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                     cfg.vocab_size),
+        "modality_emb": jax.random.normal(
+            jax.random.PRNGKey(2), (1, cfg.n_modality_tokens,
+                                    cfg.modality_embed_dim), jnp.float32),
+    }
+    cache_len = 32
+    logits, caches = M.prefill(params, cfg, prompt, cache_len)
+    logits_p, caches_p = M.prefill(params_p, cfg_p, prompt, cache_len)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_p),
+                               rtol=2e-5, atol=2e-5)
+
+    pos = prompt["tokens"].shape[1] + cfg.n_modality_tokens
+    tok = jnp.argmax(logits[:, -1:], -1)
+    for step in range(3):
+        out, caches = M.decode_step(params, cfg, caches, tok,
+                                    jnp.asarray(pos + step, jnp.int32))
+        out_p, caches_p = M.decode_step(params_p, cfg_p, caches_p, tok,
+                                        jnp.asarray(pos + step, jnp.int32))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out_p),
+                                   rtol=2e-5, atol=2e-5)
+        tok = jnp.argmax(out[:, -1:] if out.ndim == 3 else out, -1)
+        if tok.ndim == 1:
+            tok = tok[:, None]
+
+
+def test_mla_config_is_noop():
+    from repro.configs import get_config
+    cfg = get_config("deepseek-v2-236b")
+    assert pad_heads_config(cfg, 16) is cfg

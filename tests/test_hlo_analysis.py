@@ -1,0 +1,14 @@
+"""HLO collective-parsing unit tests (roofline methodology)."""
+def test_hlo_tuple_allreduce_parsing():
+    """Fused gradient all-reduces with /*index=N*/ tuple comments must be
+    counted (regression: the tuple regex once rejected '=' inside)."""
+    from repro.launch.hlo_analysis import collective_bytes
+    txt = ("  %all-reduce.768 = (f32[4,4096]{1,0}, f32[4,4096]{1,0}, "
+           "f32[4,4096]{1,0}, f32[4,4096]{1,0}, f32[4,4096]{1,0}, "
+           "/*index=5*/f32[8192,2048]{1,0}, f32[8192,2048]{1,0}) "
+           "all-reduce(%a, %b), channel_id=1, "
+           "replica_groups=[1,256]<=[256], use_global_device_ids=true\n")
+    s = collective_bytes(txt)
+    expected = 2 * (5 * 4 * 4096 * 4 + 2 * 8192 * 2048 * 4) * (255 / 256)
+    assert abs(s.by_kind["all-reduce"] - expected) < 1.0
+    assert s.count == 1

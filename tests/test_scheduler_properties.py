@@ -1,0 +1,85 @@
+"""Hypothesis property tests: the scheduler's system invariants hold for
+arbitrary interleaved HP/LP request streams (§4).
+
+Invariants:
+  I1  capacity: no device ever has core demand above its capacity.
+  I2  deadlines: every committed allocation finishes by its task deadline.
+  I3  link exclusivity: no two link reservations overlap (single shared AP).
+  I4  priority: preemption only ever evicts LOW-priority tasks, and HP tasks
+      always execute on their source device with exactly one core.
+  I5  accounting: preemptions == metrics count; realloc successes+failures
+      == number of victims.
+"""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.calendar import NetworkState
+from repro.core.network import NetworkConfig
+from repro.core.scheduler import PreemptionAwareScheduler
+from repro.core.task import LowPriorityRequest, Priority, Task
+
+N_DEV = 4
+
+event_st = st.tuples(
+    st.sampled_from(["hp", "lp"]),
+    st.integers(0, N_DEV - 1),            # source device
+    st.floats(0.0, 40.0),                 # arrival offset
+    st.integers(1, 4),                    # LP set size (ignored for HP)
+)
+
+
+def _check_invariants(state: NetworkState, net: NetworkConfig) -> None:
+    # I1 capacity
+    for dev in state.devices:
+        points = sorted({r.t1 for r in dev.reservations()}
+                        | {r.t2 for r in dev.reservations()})
+        for t1, t2 in zip(points, points[1:]):
+            mid1, mid2 = t1 + 1e-9, t2 - 1e-9
+            if mid1 < mid2:
+                assert dev.max_usage(mid1, mid2) <= dev.capacity
+    # I3 link exclusivity
+    slots = sorted(state.link._res, key=lambda r: r.t1)
+    for a, b in zip(slots, slots[1:]):
+        assert a.t2 <= b.t1 + 1e-9, (a, b)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(event_st, min_size=1, max_size=25),
+       st.booleans())
+def test_scheduler_invariants_random_streams(events, preemption):
+    state = NetworkState(N_DEV)
+    net = NetworkConfig()
+    sched = PreemptionAwareScheduler(state, net, preemption=preemption)
+    m = sched.metrics
+    victims = 0
+
+    now = 0.0
+    for kind, dev, dt, n in sorted(events, key=lambda e: e[2]):
+        now = max(now, dt)
+        if kind == "hp":
+            task = Task(priority=Priority.HIGH, source_device=dev,
+                        deadline=now + net.t_hp * 2 + 1.0, frame_id=0)
+            res = sched.allocate_high_priority(task, now)
+            if res.success:
+                a = res.allocation
+                # I4: local, single core; I2: deadline met
+                assert a.device == dev and a.cores == 1
+                assert a.t_end <= task.deadline + 1e-9
+            for v in res.preempted:
+                assert v.priority == Priority.LOW        # I4
+            victims += len(res.preempted)
+        else:
+            req = LowPriorityRequest(
+                source_device=dev, deadline=now + 80.0, frame_id=0,
+                n_tasks=n)
+            req.make_tasks()
+            res = sched.allocate_low_priority(req, now)
+            for a in res.allocations:
+                assert a.t_end <= req.deadline + 1e-9    # I2
+                assert a.cores in net.lp_core_options
+        _check_invariants(state, net)
+
+    assert m.preemptions == victims                      # I5
+    assert m.realloc_success + m.realloc_failure == victims
+    if not preemption:
+        assert victims == 0

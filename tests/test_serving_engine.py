@@ -1,0 +1,104 @@
+"""PreemptiveServingEngine behaviour: the paper's scheduler as a serving
+feature — HP deadline guarantees, LP preemption, and the beyond-paper
+resume mode (KV cache survives preemption)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.task import Priority
+from repro.models import model as M
+from repro.serving.cost_model import CostModel, PhaseCost
+from repro.serving.engine import (
+    PreemptiveServingEngine,
+    ServeRequest,
+    engine_network_config,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    # synthetic cost model (fast, deterministic; no timing needed)
+    cost = CostModel()
+    cost.prefill[1] = PhaseCost(0.05, 0.005)
+    cost.decode[2] = PhaseCost(0.02, 0.002)
+    cost.decode[4] = PhaseCost(0.014, 0.0014)
+    return cfg, params, cost
+
+
+def _engine(cfg, params, cost, lp_tokens=6, **kw):
+    net = engine_network_config(cost, lp_tokens)
+    return PreemptiveServingEngine(cfg, params, cost, n_slices=2,
+                                   units_per_slice=4, net=net, **kw), net
+
+
+def _prompt(cfg, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (1, 8), 0,
+                              cfg.vocab_size)
+
+
+def test_hp_request_completes_within_deadline(setup):
+    cfg, params, cost = setup
+    eng, net = _engine(cfg, params, cost)
+    req = ServeRequest(prompt=_prompt(cfg), max_new_tokens=1,
+                       priority=Priority.HIGH, deadline=net.t_hp * 3 + 1.0,
+                       home_slice=0)
+    eng.submit(req)
+    m = eng.run()
+    assert req.state == "done"
+    assert req.completed_at <= req.deadline + 1e-9
+    assert m.hp_completed == 1
+    assert len(req.tokens_out) == 1          # real compute happened
+
+
+def test_lp_generates_requested_tokens(setup):
+    cfg, params, cost = setup
+    eng, net = _engine(cfg, params, cost, lp_tokens=5)
+    req = ServeRequest(prompt=_prompt(cfg), max_new_tokens=5,
+                       priority=Priority.LOW, deadline=60.0, home_slice=1)
+    eng.submit(req)
+    eng.run()
+    assert req.state == "done"
+    assert len(req.tokens_out) == 5
+    assert all(0 <= t < cfg.vocab_size for t in req.tokens_out)
+
+
+def test_hp_preempts_saturating_lp(setup):
+    """Saturate slice 0 with LP work, then submit an HP request with a tight
+    deadline: with preemption it completes; without, it fails."""
+    cfg, params, cost = setup
+    for preemption, expect in ((True, "done"), (False, "failed")):
+        eng, net = _engine(cfg, params, cost, preemption=preemption)
+        lps = []
+        for i in range(4):                  # 4 x 2-core >= 4-unit slice
+            lp = ServeRequest(prompt=_prompt(cfg, i + 2), max_new_tokens=4,
+                              priority=Priority.LOW, deadline=120.0,
+                              home_slice=0)
+            lps.append(lp)
+            eng.submit(lp)
+        hp = ServeRequest(prompt=_prompt(cfg), max_new_tokens=1,
+                          priority=Priority.HIGH,
+                          deadline=net.t_hp * 2 + 0.2, home_slice=0)
+        eng.q.push(0.01, lambda r=hp: eng.submit(r))
+        m = eng.run()
+        assert hp.state == expect, (preemption, hp.state)
+        if preemption:
+            assert m.preemptions >= 1
+            assert any(lp.n_preemptions > 0 for lp in lps)
+
+
+def test_resume_mode_keeps_partial_decode(setup):
+    """Beyond-paper lose_work=False: a preempted-and-reallocated LP resumes
+    from its cached state rather than restarting (paper-faithful mode wipes
+    tokens_out on preemption)."""
+    cfg, params, cost = setup
+    eng, net = _engine(cfg, params, cost, preemption=True, lose_work=False)
+    victim = ServeRequest(prompt=_prompt(cfg, 5), max_new_tokens=4,
+                          priority=Priority.LOW, deadline=120.0, home_slice=0)
+    eng.submit(victim)
+    eng.run()
+    assert victim.state == "done"
+    # decode state registry is cleaned up on completion either way
+    assert victim.rid not in eng._decode_state

@@ -1,0 +1,87 @@
+"""End-to-end behaviour of the reproduced system (reduced workloads)."""
+import pytest
+
+from repro.sim import SCENARIOS, ScenarioConfig, run_scenario
+
+
+def small(name, **over):
+    base = SCENARIOS[name]
+    kw = dict(
+        name=base.name, trace=base.trace, algorithm=base.algorithm,
+        preemption=base.preemption, n_frames=200, seed=1,
+    )
+    kw.update(over)
+    return ScenarioConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def ups():
+    return run_scenario(small("UPS"))
+
+
+@pytest.fixture(scope="module")
+def unps():
+    return run_scenario(small("UNPS"))
+
+
+def test_preemption_rescues_high_priority(ups, unps):
+    """Paper headline: ~99% HP completion with preemption vs ~72-82%."""
+    assert ups.pct(ups.hp_completed, ups.hp_generated) > 97.0
+    assert unps.pct(unps.hp_completed, unps.hp_generated) < 90.0
+
+
+def test_preemption_increases_frames(ups, unps):
+    assert ups.frames_completed >= unps.frames_completed
+
+
+def test_preemption_costs_lp_per_request(ups, unps):
+    """Preemption lowers LP set completion (paper §6.2/Fig 5)."""
+    assert sum(unps.lp_request_fractions) / max(len(unps.lp_request_fractions), 1) >= \
+        sum(ups.lp_request_fractions) / max(len(ups.lp_request_fractions), 1)
+
+
+def test_preemption_generates_more_lp(ups, unps):
+    """More HP completions spawn more LP tasks (paper Table 2)."""
+    assert ups.lp_generated > unps.lp_generated
+
+
+def test_no_preemption_means_no_preemptions(unps):
+    assert unps.preemptions == 0
+    assert unps.realloc_success == unps.realloc_failure == 0
+
+
+def test_scheduler_beats_workstealers_on_frames():
+    s = run_scenario(small("WPS_4"))
+    d = run_scenario(small("DPW"))
+    c = run_scenario(small("CPW"))
+    assert s.frames_completed > d.frames_completed
+    assert s.frames_completed > c.frames_completed
+
+
+def test_workstealer_preemption_rescues_hp():
+    d = run_scenario(small("DPW"))
+    dn = run_scenario(small("DNPW"))
+    assert d.pct(d.hp_completed, d.hp_generated) > 97.0
+    assert dn.pct(dn.hp_completed, dn.hp_generated) < 95.0
+
+
+def test_reallocation_rarely_succeeds(ups):
+    """Paper Table 3: 0-2 successful reallocations per run."""
+    assert ups.realloc_success <= 0.05 * max(ups.preemptions, 1) + 2
+
+
+def test_metrics_accounting_consistent(ups):
+    m = ups
+    assert m.hp_completed + m.hp_failed_alloc + m.hp_failed_runtime <= \
+        m.hp_generated
+    assert m.lp_completed <= m.lp_allocated <= m.lp_generated
+    assert m.lp_offloaded_completed <= m.lp_offloaded
+    assert m.frames_completed <= m.frames_total
+
+
+def test_determinism_same_seed():
+    a = run_scenario(small("UPS"))
+    b = run_scenario(small("UPS"))
+    assert a.frames_completed == b.frames_completed
+    assert a.preemptions == b.preemptions
+    assert a.lp_completed == b.lp_completed
