@@ -30,8 +30,9 @@ def main() -> None:
             paper = paper_figures.PAPER.get((fig, scen, metric), "")
             print(f"{fig},{scen},{metric},{value:.3f},{paper}")
         sys.stdout.flush()
-    for fig, scen, metric, value in scheduler_micro.bench_scheduler_scaling():
+    for fig, scen, metric, value in scheduler_micro.bench_all(quick=args.fast):
         print(f"{fig},{scen},{metric},{value:.3f},")
+        sys.stdout.flush()
 
     if not args.skip_roofline:
         print()

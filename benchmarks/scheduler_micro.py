@@ -1,14 +1,47 @@
-"""Scheduler micro-benchmarks: wall-clock per allocation call vs network
-load (the paper's §6.3 complexity discussion: HP ~ O(local tasks),
-LP ~ O(total tasks^2))."""
+"""Scheduler micro-benchmarks: wall-clock admission latency vs network size.
+
+The paper's §6.3 complexity discussion (HP ~ O(local tasks), LP ~ O(total
+tasks^2)) is where the seed implementation stopped scaling.  This module
+measures — rather than asserts — what the skyline-calendar rewrite
+(DESIGN.md §2) buys:
+
+* ``bench_scheduler_scaling``   — the original 4-device ladder (kept for
+                                  benchmarks/run.py compatibility).
+* ``bench_calendar_speedup``    — THE acceptance benchmark: identical
+                                  pre-loaded networks (default 64 devices /
+                                  5000 in-flight tasks) probed through the
+                                  same ``PreemptionAwareScheduler`` backed by
+                                  the seed calendars
+                                  (``calendar_reference``) vs the skyline
+                                  calendars; reports per-admission latency
+                                  and the speedup ratio.
+* ``bench_batch_admission``     — sequential per-request admission vs
+                                  ``allocate_low_priority_batch`` over the
+                                  same burst.
+* ``bench_large_n``             — the sim/scenarios.py suite end-to-end:
+                                  device ladder 4 -> 256, the three arrival
+                                  families, and an HP:LP mix sweep.
+
+Run directly::
+
+    PYTHONPATH=src python benchmarks/scheduler_micro.py [--quick]
+
+``--quick`` shrinks the workloads for CI smoke use (a scheduler-latency
+regression still shows as a ratio, just with more noise).
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 from repro.core.calendar import NetworkState
+from repro.core.calendar_reference import ReferenceNetworkState
 from repro.core.network import NetworkConfig
 from repro.core.scheduler import PreemptionAwareScheduler
-from repro.core.task import LowPriorityRequest, Priority, Task
+from repro.core.task import LowPriorityRequest, Priority, Task, reset_id_counters
+from repro.sim.scenarios import LargeNConfig, run_large_n, sweep_devices, sweep_mix
+
+Row = tuple[str, str, str, float]
 
 
 def _loaded_state(n_devices: int, n_tasks: int, net: NetworkConfig):
@@ -29,7 +62,7 @@ def _loaded_state(n_devices: int, n_tasks: int, net: NetworkConfig):
     return state, sched
 
 
-def bench_scheduler_scaling(loads=(8, 32, 128), reps: int = 30):
+def bench_scheduler_scaling(loads=(8, 32, 128), reps: int = 30) -> list[Row]:
     """Rows: (bench, load, metric, us_per_call)."""
     rows = []
     net = NetworkConfig()
@@ -57,3 +90,200 @@ def bench_scheduler_scaling(loads=(8, 32, 128), reps: int = 30):
         lp_us = (time.perf_counter() - t0) / reps * 1e6
         rows.append(("sched_micro", str(load), "lp_alloc_us", lp_us))
     return rows
+
+
+# --------------------------------------------------------------------- #
+# Reference vs skyline calendars on an identical pre-loaded network     #
+# --------------------------------------------------------------------- #
+def _preload(state, n_tasks: int, horizon: float, seed: int = 7) -> None:
+    """Deterministically fill ``state`` with n_tasks in-flight reservations
+    (identical content for either calendar implementation)."""
+    import random
+
+    rng = random.Random(seed)
+    net = NetworkConfig()
+    n_dev = len(state.devices)
+    for i in range(n_tasks):
+        dev = state.devices[rng.randrange(n_dev)]
+        t1 = rng.uniform(0.0, horizon)
+        cores = 2 if rng.random() < 0.8 else 4
+        dur = net.lp_slot_time(cores) * rng.uniform(0.9, 1.1)
+        task = Task(priority=Priority.LOW, source_device=dev.device,
+                    deadline=t1 + 200.0, frame_id=i)
+        task.state = task.state.ALLOCATED
+        dev.reserve(t1, t1 + dur, cores, task)
+        # every in-flight task also holds a state-update link slot
+        state.link.reserve(t1 + dur, t1 + dur + net.slot(net.msg.state_update),
+                           ("update", task.task_id))
+
+
+def _probe_admissions(state, net: NetworkConfig, probes: int) -> tuple[float, float]:
+    """Mean per-call wall time (us) for HP and single-task-LP admission.
+    Every successful probe is rolled back so all probes see the same state;
+    only the admission call itself is timed (rollback cost differs between
+    the calendar implementations and is not admission latency)."""
+    sched = PreemptionAwareScheduler(state, net, preemption=False)
+
+    hp_t = 0.0
+    for i in range(probes):
+        task = Task(priority=Priority.HIGH, source_device=i % len(state.devices),
+                    deadline=1e6, frame_id=i)
+        t0 = time.perf_counter()
+        res = sched.allocate_high_priority(task, 0.0)
+        hp_t += time.perf_counter() - t0
+        if res.allocation is not None:
+            state.devices[task.device].release(task)
+            for slot in res.allocation.link_slots:
+                state.link.cancel(slot)
+    hp_us = hp_t / probes * 1e6
+
+    lp_t = 0.0
+    for i in range(probes):
+        req = LowPriorityRequest(source_device=i % len(state.devices),
+                                 deadline=120.0, frame_id=i, n_tasks=1)
+        req.make_tasks()
+        t0 = time.perf_counter()
+        res = sched.allocate_low_priority(req, 0.0)
+        lp_t += time.perf_counter() - t0
+        for alloc in res.allocations:
+            state.devices[alloc.device].release(alloc.task)
+            for slot in alloc.link_slots:
+                state.link.cancel(slot)
+    lp_us = lp_t / probes * 1e6
+    return hp_us, lp_us
+
+
+def bench_calendar_speedup(
+    n_devices: int = 64, n_tasks: int = 5000, probes: int = 40
+) -> list[Row]:
+    """Acceptance benchmark: per-task admission latency, seed calendars vs
+    skyline calendars, same 64-device / 5k-in-flight-task network."""
+    net = NetworkConfig()
+    horizon = 250.0 * (n_tasks / 5000.0) * (64.0 / max(n_devices, 1))
+    rows: list[Row] = []
+    label = f"{n_devices}dev_{n_tasks}tasks"
+
+    reset_id_counters()
+    ref = ReferenceNetworkState(n_devices)
+    _preload(ref, n_tasks, horizon)
+    ref_hp, ref_lp = _probe_admissions(ref, net, probes)
+
+    reset_id_counters()
+    new = NetworkState(n_devices)
+    _preload(new, n_tasks, horizon)
+    new_hp, new_lp = _probe_admissions(new, net, probes)
+
+    rows.append(("calendar_speedup", label, "ref_hp_alloc_us", ref_hp))
+    rows.append(("calendar_speedup", label, "new_hp_alloc_us", new_hp))
+    rows.append(("calendar_speedup", label, "ref_lp_alloc_us", ref_lp))
+    rows.append(("calendar_speedup", label, "new_lp_alloc_us", new_lp))
+    rows.append(("calendar_speedup", label, "hp_speedup_x", ref_hp / max(new_hp, 1e-9)))
+    rows.append(("calendar_speedup", label, "lp_speedup_x", ref_lp / max(new_lp, 1e-9)))
+    return rows
+
+
+# --------------------------------------------------------------------- #
+# Batch admission vs sequential admission over the same burst           #
+# --------------------------------------------------------------------- #
+def bench_batch_admission(n_devices: int = 64, n_requests: int = 200) -> list[Row]:
+    net = NetworkConfig()
+    label = f"{n_devices}dev_{n_requests}req"
+
+    def burst():
+        reqs = []
+        for i in range(n_requests):
+            r = LowPriorityRequest(source_device=i % n_devices, deadline=120.0,
+                                   frame_id=i, n_tasks=1 + i % 4)
+            r.make_tasks()
+            reqs.append(r)
+        return reqs
+
+    reset_id_counters()
+    sched = PreemptionAwareScheduler(NetworkState(n_devices), net)
+    reqs = burst()
+    t0 = time.perf_counter()
+    seq_ok = sum(len(sched.allocate_low_priority(r, 0.0).allocations)
+                 for r in reqs)
+    seq_us = (time.perf_counter() - t0) / n_requests * 1e6
+
+    reset_id_counters()
+    sched = PreemptionAwareScheduler(NetworkState(n_devices), net)
+    reqs = burst()
+    t0 = time.perf_counter()
+    results = sched.allocate_low_priority_batch(reqs, 0.0)
+    batch_us = (time.perf_counter() - t0) / n_requests * 1e6
+    batch_ok = sum(len(r.allocations) for r in results)
+
+    return [
+        ("batch_admission", label, "sequential_us_per_req", seq_us),
+        ("batch_admission", label, "batch_us_per_req", batch_us),
+        ("batch_admission", label, "batch_speedup_x", seq_us / max(batch_us, 1e-9)),
+        ("batch_admission", label, "sequential_allocated", float(seq_ok)),
+        ("batch_admission", label, "batch_allocated", float(batch_ok)),
+    ]
+
+
+# --------------------------------------------------------------------- #
+# Large-N scenario suite end-to-end                                     #
+# --------------------------------------------------------------------- #
+def bench_large_n(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    dur = 20.0 if quick else 120.0
+    sizes = (16, 64, 256) if quick else (4, 16, 64, 256)
+
+    base = LargeNConfig(name="poisson", duration=dur)
+    for cfg in sweep_devices(base, sizes):
+        s = run_large_n(cfg, batch_window=0.25)
+        for k in ("hp_alloc_us_mean", "lp_alloc_us_mean", "lp_alloc_us_p99",
+                  "hp_admitted", "lp_allocated", "preemptions", "wall_s"):
+            rows.append(("large_n", cfg.name, k, float(s[k])))
+
+    for fam in ("bursty", "adversarial"):
+        cfg = LargeNConfig(name=fam, arrival=fam, n_devices=64,
+                           duration=dur if fam == "adversarial" else dur / 2)
+        s = run_large_n(cfg, batch_window=0.25)
+        for k in ("hp_alloc_us_mean", "lp_alloc_us_mean", "wall_s"):
+            rows.append(("large_n", cfg.name, k, float(s[k])))
+
+    # HP:LP mix sweep at 64 devices
+    for cfg in sweep_mix(LargeNConfig(name="mix", n_devices=64,
+                                      duration=dur / 2),
+                         (0.0, 0.5, 1.0) if quick else (0.0, 0.25, 0.5, 0.75, 1.0)):
+        s = run_large_n(cfg, batch_window=0.25)
+        rows.append(("large_n", cfg.name, "lp_alloc_us_mean",
+                     float(s["lp_alloc_us_mean"])))
+        rows.append(("large_n", cfg.name, "lp_allocated", float(s["lp_allocated"])))
+    return rows
+
+
+def bench_all(quick: bool = False) -> list[Row]:
+    import gc
+
+    rows: list[Row] = []
+    rows += bench_scheduler_scaling()
+    gc.collect()                   # isolate benches from each other's garbage
+    if quick:
+        rows += bench_calendar_speedup(n_devices=16, n_tasks=1000, probes=15)
+    else:
+        rows += bench_calendar_speedup()
+    gc.collect()
+    rows += bench_batch_admission(16 if quick else 64, 60 if quick else 200)
+    gc.collect()
+    rows += bench_large_n(quick)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized workloads (seconds instead of minutes)")
+    args = ap.parse_args()
+    t0 = time.time()
+    print("figure,scenario,metric,value")
+    for fig, scen, metric, value in bench_all(quick=args.quick):
+        print(f"{fig},{scen},{metric},{value:.3f}")
+    print(f"# total scheduler_micro time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,7 @@
 """Architecture registry: ``--arch <id>`` -> ModelConfig (+ smoke variants).
 
 Every entry cites its source paper/model-card; the exact dims come from the
-assignment table (see DESIGN.md §4).
+assignment table (see DESIGN.md §8.1).
 """
 from __future__ import annotations
 

@@ -4,7 +4,7 @@ Decode shapes lower ``serve_step`` (ONE new token against a KV/state cache of
 ``seq_len``), not ``train_step``.  ``long_500k`` requires sub-quadratic
 attention: SSM/hybrid archs run natively; attention archs run a
 sliding-window KV-cache variant (window = cfg.long_context_window) — see
-DESIGN.md §Shape/skip policy.
+DESIGN.md §8.2 (Shape/skip policy).
 """
 from __future__ import annotations
 

@@ -1,3 +1,32 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from .calendar import DeviceCalendar, LinkCalendar, NetworkState, Reservation
+from .metrics import Metrics
+from .network import MessageSizes, NetworkConfig
+from .scheduler import (
+    Allocation,
+    HPResult,
+    LPResult,
+    PreemptionAwareScheduler,
+)
+from .task import Frame, LowPriorityRequest, Priority, Task, TaskState
+
+__all__ = [
+    "Allocation",
+    "DeviceCalendar",
+    "Frame",
+    "HPResult",
+    "LinkCalendar",
+    "LowPriorityRequest",
+    "LPResult",
+    "MessageSizes",
+    "Metrics",
+    "NetworkConfig",
+    "NetworkState",
+    "PreemptionAwareScheduler",
+    "Priority",
+    "Reservation",
+    "Task",
+    "TaskState",
+]

@@ -1,17 +1,65 @@
 """Time-slotted resource calendars for the shared link and device cores.
 
 The controller allocates variable-length time-slots on every resource such
-that no two tasks hold the same resource simultaneously (paper §3).  The link
-is a unit-capacity resource; each edge device is a capacity-C resource
-(C = 4 cores on the RPi2B).
+that no two tasks hold the same resource simultaneously (paper §3, "network
+state").  The link is a unit-capacity resource; each edge device is a
+capacity-C resource (C = 4 cores on the RPi2B).
+
+Scalability rewrite (DESIGN.md §2)
+----------------------------------
+The seed implementation (kept as :mod:`repro.core.calendar_reference`)
+answered every probe with an O(n) sweep over a flat reservation list, where
+n is the number of *live reservations on the resource*, and garbage-collected
+with a full O(n) rescan per admission call.  At the paper's scale (4 devices,
+1296 frames) that is invisible; at 64-256 devices with thousands of in-flight
+tasks it dominates admission latency, because the LP algorithm (§4) probes
+``fits``/``load`` once per candidate device per completion time-point.
+
+This module replaces the flat lists with three incremental structures:
+
+1. ``_StepFn`` — a coalesced piecewise-constant *skyline* of resource usage,
+   stored as parallel sorted arrays ``times[i]``/``vals[i]`` (usage is
+   ``vals[i]`` on ``[times[i], times[i+1])``).  Point location is a single
+   ``bisect`` (O(log n)); range queries (``max_usage``, ``fits``,
+   ``free_cores``, ``load``) then touch only the k segments intersecting the
+   query window — O(log n + k), with k bounded by the number of tasks
+   *overlapping the window*, not the total task count.  Adjacent segments
+   with equal usage are merged on every update, so a fully packed busy run
+   (the link's steady state) collapses to ONE segment and
+   ``earliest_slot`` skips it in O(1) instead of walking every reservation
+   in the run.
+2. Per-device sorted completion-time arrays (``_t2s``) — ``completion_times``
+   becomes a bisect-windowed slice instead of a scan of every reservation;
+   :meth:`NetworkState.completion_times` lazily merges the per-device sorted
+   slices with ``heapq.merge`` (O(k log D) for k points across D devices).
+3. Expiry min-heaps — ``gc(now)`` pops only reservations that actually died
+   since the previous call (amortised O(log n) each) instead of rescanning
+   everything; the step function truncates its history in one splice.
+
+Invariants (checked by tests/test_calendar.py and the differential suite in
+tests/test_calendar_equivalence.py):
+
+* ``times`` is strictly increasing with ``times[0] == -inf``; no two adjacent
+  ``vals`` are equal (coalesced); the final segment always decays to 0
+  because every reservation is finite.
+* After ``gc(now)``, answers are only defined for query windows with
+  ``t >= now`` (history before ``now`` is collapsed into the sentinel
+  segment).  This matches how the scheduler uses the calendars: it always
+  garbage-collects to the current controller time before probing.
+* EPS semantics match the reference: sub-EPS overlaps are ignored by
+  queries, and ``earliest_slot`` accepts a gap of ``duration - EPS``.
 """
 from __future__ import annotations
 
-import bisect
+import heapq
+import itertools
+import math
+from bisect import bisect_left, bisect_right, insort
 from dataclasses import dataclass, field
-from typing import Iterable, Optional
+from typing import Iterable, Iterator, Optional
 
 EPS = 1e-9
+_INF = math.inf
 
 
 @dataclass
@@ -25,34 +73,169 @@ class Reservation:
         return self.t1 < t2 - EPS and t1 < self.t2 - EPS
 
 
-class LinkCalendar:
-    """Unit-capacity calendar for the shared wireless link."""
+class _StepFn:
+    """Coalesced piecewise-constant usage-over-time (the skyline).
+
+    ``vals[i]`` is the usage on ``[times[i], times[i+1])``; the last segment
+    extends to +inf.  ``floor`` is the horizon set by :meth:`gc`: updates
+    and queries are clamped to it, so collapsed history can never corrupt
+    live segments.
+    """
+
+    __slots__ = ("times", "vals", "floor")
 
     def __init__(self) -> None:
-        self._starts: list[float] = []
-        self._res: list[Reservation] = []
+        self.times: list[float] = [-_INF]
+        self.vals: list[int] = [0]
+        self.floor: float = -_INF
+
+    # -- updates --------------------------------------------------------- #
+    def _cut(self, t: float) -> int:
+        """Ensure a breakpoint at exactly t; return its segment index."""
+        i = bisect_right(self.times, t) - 1
+        if self.times[i] == t:
+            return i
+        self.times.insert(i + 1, t)
+        self.vals.insert(i + 1, self.vals[i])
+        return i + 1
+
+    def add(self, t1: float, t2: float, amount: int) -> None:
+        """Add ``amount`` to the usage over [t1, t2) (negative to remove)."""
+        if t1 < self.floor:
+            t1 = self.floor
+        if t2 <= t1:
+            return
+        i1 = self._cut(t1)
+        i2 = self._cut(t2)                    # t2 > t1 => i2 > i1, i1 stable
+        for i in range(i1, i2):
+            self.vals[i] += amount
+        # re-coalesce around the touched range (keeps the arrays minimal)
+        j = max(i1, 1)
+        hi = i2
+        while j <= hi and j < len(self.times):
+            if self.vals[j] == self.vals[j - 1]:
+                del self.times[j]
+                del self.vals[j]
+                hi -= 1
+            else:
+                j += 1
+
+    def gc(self, now: float) -> None:
+        """Collapse all history before ``now`` into the sentinel segment."""
+        if now <= self.floor:
+            return
+        self.floor = now
+        i = bisect_right(self.times, now) - 1
+        if i > 0:
+            v = self.vals[i]
+            del self.times[1 : i + 1]
+            del self.vals[1 : i + 1]
+            self.vals[0] = v
+
+    # -- queries --------------------------------------------------------- #
+    def max_over(self, t1: float, t2: float) -> int:
+        """Max usage over [t1, t2); 0 for empty windows."""
+        if t2 <= t1:
+            return 0
+        times, vals = self.times, self.vals
+        i = bisect_right(times, t1) - 1
+        m = vals[i]
+        i += 1
+        n = len(times)
+        while i < n and times[i] < t2:
+            if vals[i] > m:
+                m = vals[i]
+            i += 1
+        return m
+
+    def exceeds(self, t1: float, t2: float, limit: int) -> bool:
+        """True iff usage ever exceeds ``limit`` on [t1, t2) (early exit)."""
+        if t2 <= t1:
+            return False
+        times, vals = self.times, self.vals
+        i = bisect_right(times, t1) - 1
+        if vals[i] > limit:
+            return True
+        i += 1
+        n = len(times)
+        while i < n and times[i] < t2:
+            if vals[i] > limit:
+                return True
+            i += 1
+        return False
+
+    def integral(self, t1: float, t2: float) -> float:
+        """Usage-seconds over [t1, t2) (the ``load`` of the window)."""
+        if t2 <= t1:
+            return 0.0
+        times, vals = self.times, self.vals
+        i = bisect_right(times, t1) - 1
+        n = len(times)
+        total = 0.0
+        while i < n and times[i] < t2:
+            if vals[i]:
+                a = times[i] if times[i] > t1 else t1
+                b = times[i + 1] if i + 1 < n and times[i + 1] < t2 else t2
+                total += vals[i] * (b - a)
+            i += 1
+        return total
+
+    def first_fit(self, duration: float, not_before: float, limit: int) -> float:
+        """Earliest t >= not_before with usage <= limit over [t, t+duration).
+
+        Because the skyline is coalesced, a contiguous busy run — no matter
+        how many reservations it packs — is a single segment and is skipped
+        in O(1).
+        """
+        times, vals = self.times, self.vals
+        t = not_before if not_before > self.floor else self.floor
+        i = bisect_right(times, t) - 1
+        n = len(times)
+        cand = t
+        while True:
+            if vals[i] > limit:
+                i += 1
+                if i >= n:              # unreachable: final segment is free
+                    return cand
+                cand = times[i]
+            else:
+                seg_end = times[i + 1] if i + 1 < n else _INF
+                if seg_end - cand >= duration - EPS:
+                    return cand
+                i += 1
+
+
+class LinkCalendar:
+    """Unit-capacity calendar for the shared wireless link.
+
+    ``earliest_slot`` is an O(log n + runs) skyline walk; ``gc`` retires only
+    the slots that expired since the previous call (expiry min-heap).
+    """
+
+    def __init__(self) -> None:
+        self._starts: list[float] = []          # sorted by t1, parallel to
+        self._res: list[Reservation] = []       # the live reservation list
+        self._expiry: list[tuple[float, int, Reservation]] = []
+        self._seq = itertools.count()
+        self._sky = _StepFn()
 
     def __len__(self) -> int:
         return len(self._res)
 
+    def reservations(self) -> Iterable[Reservation]:
+        return iter(self._res)
+
     def earliest_slot(self, duration: float, not_before: float) -> float:
         """Earliest t >= not_before such that [t, t+duration) is free."""
-        t = not_before
-        idx = bisect.bisect_left(self._starts, t)
-        # A reservation starting before t may still cover it.
-        if idx > 0 and self._res[idx - 1].t2 > t + EPS:
-            t = self._res[idx - 1].t2
-        for r in self._res[idx:]:
-            if r.t1 >= t + duration - EPS:
-                break
-            t = max(t, r.t2)
-        return t
+        return self._sky.first_fit(duration, not_before, 0)
 
     def reserve(self, t1: float, t2: float, tag: object = None) -> Reservation:
         r = Reservation(t1, t2, 1, tag)
-        idx = bisect.bisect_left(self._starts, t1)
+        idx = bisect_left(self._starts, t1)
         self._starts.insert(idx, t1)
         self._res.insert(idx, r)
+        self._sky.add(t1, t2, 1)
+        heapq.heappush(self._expiry, (t2, next(self._seq), r))
         return r
 
     def reserve_earliest(
@@ -61,27 +244,55 @@ class LinkCalendar:
         t1 = self.earliest_slot(duration, not_before)
         return self.reserve(t1, t1 + duration, tag)
 
+    def _locate(self, res: Reservation) -> int:
+        """Index of ``res`` in the live list, -1 if absent (O(log n + dups))."""
+        idx = bisect_left(self._starts, res.t1)
+        while idx < len(self._res) and self._starts[idx] == res.t1:
+            if self._res[idx] is res or self._res[idx] == res:
+                return idx
+            idx += 1
+        return -1
+
     def cancel(self, res: Reservation) -> None:
-        try:
-            idx = self._res.index(res)
-        except ValueError:
+        """Remove a reservation; cancelling twice (or a foreign/expired slot)
+        is a no-op."""
+        idx = self._locate(res)
+        if idx < 0:
             return
+        r = self._res[idx]
         del self._res[idx]
         del self._starts[idx]
+        self._sky.add(r.t1, r.t2, -1)
 
     def gc(self, now: float) -> None:
-        keep = [r for r in self._res if r.t2 > now]
-        self._res = keep
-        self._starts = [r.t1 for r in keep]
+        """Retire slots with t2 <= now.  Amortised O(log n) per dead slot."""
+        heap = self._expiry
+        while heap and heap[0][0] <= now:
+            _, _, r = heapq.heappop(heap)
+            idx = self._locate(r)
+            if idx >= 0 and self._res[idx].t2 <= now:
+                del self._res[idx]
+                del self._starts[idx]
+        self._sky.gc(now)
 
 
 class DeviceCalendar:
-    """Capacity-C calendar for one edge device's cores."""
+    """Capacity-C calendar for one edge device's cores.
+
+    Core-usage queries go through the skyline; ``completion_times`` reads a
+    bisect-window of the sorted ``_t2s`` array; reservation identity
+    (reserve / release / truncate by tag) stays a dict, which the preemption
+    path also uses to enumerate conflict candidates.
+    """
 
     def __init__(self, device: int, capacity: int = 4) -> None:
         self.device = device
         self.capacity = capacity
         self._res: dict[object, Reservation] = {}
+        self._sky = _StepFn()
+        self._t2s: list[float] = []             # sorted completion times
+        self._expiry: list[tuple[float, int, object]] = []
+        self._seq = itertools.count()
 
     def __len__(self) -> int:
         return len(self._res)
@@ -89,67 +300,104 @@ class DeviceCalendar:
     def reservations(self) -> Iterable[Reservation]:
         return self._res.values()
 
-    def usage_profile(self, t1: float, t2: float) -> list[tuple[float, int]]:
-        """Sweep-line (time, cores-in-use) change points within [t1, t2)."""
-        events: list[tuple[float, int]] = []
-        for r in self._res.values():
-            if r.overlaps(t1, t2):
-                events.append((max(r.t1, t1), r.amount))
-                events.append((min(r.t2, t2), -r.amount))
-        events.sort()
-        return events
-
+    # -- queries (all O(log n + segments-in-window)) ---------------------- #
     def max_usage(self, t1: float, t2: float) -> int:
-        cur = peak = 0
-        for _, delta in self.usage_profile(t1, t2):
-            cur += delta
-            peak = max(peak, cur)
-        return peak
+        # Shrink by EPS so sub-EPS boundary overlaps are ignored, matching
+        # Reservation.overlaps() in the reference implementation.
+        return self._sky.max_over(t1 + EPS, t2 - EPS)
 
     def free_cores(self, t1: float, t2: float) -> int:
         return self.capacity - self.max_usage(t1, t2)
 
     def fits(self, t1: float, t2: float, cores: int) -> bool:
-        return self.max_usage(t1, t2) + cores <= self.capacity
+        return not self._sky.exceeds(t1 + EPS, t2 - EPS, self.capacity - cores)
 
+    def load(self, t1: float, t2: float) -> float:
+        """Reserved core-seconds overlapping [t1, t2) (for even spreading)."""
+        return self._sky.integral(t1, t2)
+
+    def earliest_fit(self, duration: float, not_before: float, cores: int) -> float:
+        """Earliest t >= not_before where ``cores`` fit for ``duration``."""
+        return self._sky.first_fit(duration, not_before, self.capacity - cores)
+
+    def completion_times(self, after: float, before: float) -> list[float]:
+        lo = bisect_right(self._t2s, after + EPS)
+        hi = bisect_left(self._t2s, before - EPS, lo)
+        return [t for t, _ in itertools.groupby(self._t2s[lo:hi])]
+
+    def _completion_window(self, after: float, before: float) -> list[float]:
+        """Sorted (possibly duplicated) slice for NetworkState's k-way merge."""
+        lo = bisect_right(self._t2s, after + EPS)
+        hi = bisect_left(self._t2s, before - EPS, lo)
+        return self._t2s[lo:hi]
+
+    # -- updates ---------------------------------------------------------- #
     def reserve(self, t1: float, t2: float, cores: int, tag: object) -> Reservation:
+        prev = self._res.pop(tag, None)
+        if prev is not None:                    # re-reserving a tag replaces it
+            self._remove_interval(prev)
         r = Reservation(t1, t2, cores, tag)
         self._res[tag] = r
+        self._sky.add(t1, t2, cores)
+        insort(self._t2s, t2)
+        heapq.heappush(self._expiry, (t2, next(self._seq), tag))
         return r
 
+    def _remove_interval(self, r: Reservation) -> None:
+        self._sky.add(r.t1, r.t2, -r.amount)
+        i = bisect_left(self._t2s, r.t2)
+        if i < len(self._t2s) and self._t2s[i] == r.t2:
+            del self._t2s[i]
+
     def release(self, tag: object) -> Optional[Reservation]:
-        return self._res.pop(tag, None)
+        r = self._res.pop(tag, None)
+        if r is not None:
+            self._remove_interval(r)
+        return r
 
     def get(self, tag: object) -> Optional[Reservation]:
         return self._res.get(tag)
 
     def truncate(self, tag: object, t_end: float) -> None:
-        """Shorten a reservation (early completion / violation)."""
+        """Shorten a reservation (early completion / violation).  Truncating
+        to (or before) its start removes it entirely."""
         r = self._res.get(tag)
         if r is None:
             return
         if t_end <= r.t1 + EPS:
             self._res.pop(tag)
-        else:
-            r.t2 = min(r.t2, t_end)
-
-    def load(self, t1: float, t2: float) -> float:
-        """Reserved core-seconds overlapping [t1, t2) (for even spreading)."""
-        total = 0.0
-        for r in self._res.values():
-            if r.overlaps(t1, t2):
-                total += (min(r.t2, t2) - max(r.t1, t1)) * r.amount
-        return total
-
-    def completion_times(self, after: float, before: float) -> list[float]:
-        return sorted(
-            {r.t2 for r in self._res.values() if after + EPS < r.t2 < before - EPS}
-        )
+            self._remove_interval(r)
+            return
+        if t_end >= r.t2:
+            return
+        self._sky.add(t_end, r.t2, -r.amount)
+        i = bisect_left(self._t2s, r.t2)
+        if i < len(self._t2s) and self._t2s[i] == r.t2:
+            del self._t2s[i]
+        insort(self._t2s, t_end)
+        r.t2 = t_end
+        heapq.heappush(self._expiry, (t_end, next(self._seq), tag))
 
     def gc(self, now: float) -> None:
-        dead = [tag for tag, r in self._res.items() if r.t2 <= now]
-        for tag in dead:
-            del self._res[tag]
+        """Retire reservations with t2 <= now; O(log n) per retirement.
+
+        In-flight reservations straddling ``now`` keep their full remaining
+        interval; their pre-``now`` history is collapsed by the skyline."""
+        heap, res = self._expiry, self._res
+        while heap and heap[0][0] <= now:
+            t2, _, tag = heapq.heappop(heap)
+            r = res.get(tag)
+            if r is None:
+                continue
+            if r.t2 <= now:
+                del res[tag]
+            elif r.t2 != t2:
+                # stale entry (tag was truncated/re-reserved); re-index
+                heapq.heappush(heap, (r.t2, next(self._seq), tag))
+        lo = bisect_right(self._t2s, now)
+        if lo:
+            del self._t2s[:lo]
+        self._sky.gc(now)
 
 
 @dataclass
@@ -168,10 +416,48 @@ class NetworkState:
             ]
 
     def completion_times(self, after: float, before: float) -> list[float]:
-        pts: set[float] = set()
-        for dev in self.devices:
-            pts.update(dev.completion_times(after, before))
-        return sorted(pts)
+        """Sorted unique completion time-points in (after, before), network
+        wide — the LP algorithm's §4 search grid.  k-way merge of per-device
+        pre-sorted windows: O(k log D) for k points over D devices."""
+        windows = [
+            w for d in self.devices if (w := d._completion_window(after, before))
+        ]
+        if not windows:
+            return []
+        if len(windows) == 1:
+            return [t for t, _ in itertools.groupby(windows[0])]
+        return [t for t, _ in itertools.groupby(heapq.merge(*windows))]
+
+    def iter_completion_times(self, after: float, before: float) -> Iterator[float]:
+        """Lazy variant of :meth:`completion_times`: yields the same sorted
+        unique points, but pays O(log D) per *consumed* point instead of
+        merging the whole window up front.  The LP sweep usually allocates
+        within the first few time-points, so most of the merge never runs.
+
+        The device windows are snapshot slices taken EAGERLY, at call time —
+        not at first ``next()`` — so reservations committed while iterating
+        do not perturb the grid (the seed's snapshot semantics; a lazily
+        snapshotting generator would let the first sweep round's commits
+        leak into the grid)."""
+        windows = [
+            w for d in self.devices if (w := d._completion_window(after, before))
+        ]
+        heap = [(w[0], i, 0) for i, w in enumerate(windows)]
+        heapq.heapify(heap)
+
+        def merge() -> Iterator[float]:
+            last = None
+            while heap:
+                v, i, p = heapq.heappop(heap)
+                if v != last:
+                    last = v
+                    yield v
+                p += 1
+                w = windows[i]
+                if p < len(w):
+                    heapq.heappush(heap, (w[p], i, p))
+
+        return merge()
 
     def total_allocated_tasks(self) -> int:
         return sum(len(d) for d in self.devices)

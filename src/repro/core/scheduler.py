@@ -1,20 +1,48 @@
-"""The paper's two scheduling algorithms (§4).
+"""The paper's two scheduling algorithms (§4), scaled for large networks.
 
-High-priority allocation: local-only, single-core, allocated at arrival time;
-optionally backed by the deadline-aware preemption mechanism.
+High-priority allocation (`allocate_high_priority`): local-only, single-core,
+allocated at arrival time; optionally backed by the deadline-aware preemption
+mechanism (victims are conflicting LP reservations, farthest deadline first,
+each followed by a reallocation attempt).
 
-Low-priority allocation: offloadable, multi-configuration (2/4-core horizontal
-partitioning), searching over the completion time-points of already-allocated
-tasks up to the request deadline, with partial allocation, even spreading and
-a core-upgrade pass.
+Low-priority allocation (`allocate_low_priority`): offloadable,
+multi-configuration (2/4-core horizontal partitioning), searching over the
+completion time-points of already-allocated tasks up to the request deadline,
+with partial allocation, even spreading (least-loaded device first) and a
+core-upgrade pass.
+
+Complexity (DESIGN.md §2.3, paper §6.3)
+---------------------------------------
+Every probe the algorithms issue (`fits`, `load`, `earliest_slot`,
+`completion_times`) is answered by the skyline calendars in
+O(log n + k) for k structures intersecting the probed window, so:
+
+* HP admission is O(log n + conflicts) per call — the preemption loop only
+  enumerates reservations on the *source device*.
+* LP admission is O(T · D · (log n + k)) for T time-points searched and D
+  devices, with T bounded by the completion points inside the request's
+  deadline window rather than every reservation in the network.
+* `allocate_low_priority_batch` admits a whole arrival burst in ONE
+  `gc` + ONE network-wide time-point sweep (a monotone heap that also absorbs
+  completion points created by the batch itself), instead of re-running the
+  full sweep per request — the per-request cost at high arrival rates drops
+  by roughly the batch size (measured in benchmarks/scheduler_micro.py).
+
+Link-slot hygiene: every committed allocation records its link reservations
+(`alloc`/`xfer`/`update` messages); when a victim is preempted, its
+still-pending link slots are cancelled so the shared link does not
+permanently inflate with dead traffic (a seed bug — see
+tests/test_scheduler.py::test_preemption_cancels_victim_link_slots).
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import time as _time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
-from .calendar import NetworkState, Reservation
+from .calendar import EPS, NetworkState, Reservation
 from .metrics import Metrics
 from .network import NetworkConfig
 from .task import LowPriorityRequest, Priority, Task, TaskState
@@ -77,6 +105,10 @@ class PreemptionAwareScheduler:
             raise ValueError(victim_policy)
         self.victim_policy = victim_policy
         self._requests: dict[int, LowPriorityRequest] = {}
+        # task_id -> link reservations committed for that task, so preemption
+        # can cancel the victim's pending xfer/update messages.
+        self._link_slots: dict[int, list[Reservation]] = {}
+        self._link_prune_at = 256
 
     # ------------------------------------------------------------------ #
     # High-priority algorithm                                            #
@@ -84,6 +116,7 @@ class PreemptionAwareScheduler:
     def allocate_high_priority(self, task: Task, now: float) -> HPResult:
         t_wall = _time.perf_counter()
         self.state.gc(now)
+        self._prune_link_slots(now)
         result = self._hp_inner(task, now)
         elapsed = _time.perf_counter() - t_wall
         if result.preempted:
@@ -134,6 +167,12 @@ class PreemptionAwareScheduler:
             victim_res = min(conflicts, key=self._victim_key)
             victim: Task = victim_res.tag
             dev.release(victim)
+            # Cancel the victim's still-pending link slots (xfer/update):
+            # leaving them reserved would permanently inflate link congestion
+            # with traffic for a task that will never run in that slot.
+            for slot in self._link_slots.pop(victim.task_id, ()):
+                if slot.t2 > now + EPS:
+                    link.cancel(slot)
             victim.state = TaskState.PREEMPTED
             victim.preempt_count += 1
             self.metrics.preemptions += 1
@@ -201,37 +240,280 @@ class PreemptionAwareScheduler:
         task.state = TaskState.ALLOCATED
         task.device, task.cores = task.source_device, 1
         task.t_start, task.t_end, task.offloaded = t1, t2, False
+        self._link_slots[task.task_id] = slots
         return Allocation(task, task.source_device, t1, t2, 1, False, slots)
 
     # ------------------------------------------------------------------ #
     # Low-priority algorithm                                             #
     # ------------------------------------------------------------------ #
     def allocate_low_priority(self, request: LowPriorityRequest, now: float) -> LPResult:
+        """Admit one LP request: search the §4 time-point grid, partially
+        allocating each task at its minimum viable configuration, then try to
+        upgrade allocations at every time-point while tasks remain pending.
+
+        The search order and results are the paper's exactly; the only
+        scalability addition is the skip-hint pruning (see `_hint_start`),
+        which elides time-points where a full device scan would *provably*
+        fail and therefore cannot change the outcome."""
         t_wall = _time.perf_counter()
         self.state.gc(now)
+        self._prune_link_slots(now)
         self._requests[request.request_id] = request     # set-health registry
         deadline = request.deadline
         unallocated = [t for t in request.tasks if t.state == TaskState.PENDING]
         result = LPResult()
 
-        time_points = [now] + self.state.completion_times(now, deadline)
+        hints: dict[int, float] = {}
+        ctx: dict = {}                        # shared placement memo (§4 scan)
+        time_points = self._time_point_grid(now, deadline)
         for tp in time_points:
             if not unallocated:
                 break
+            round_hint: object = False        # computed lazily, once per tp
             for task in list(unallocated):
-                alloc = self._allocate_lp_task(task, tp, deadline)
+                hint = hints.get(task.task_id)
+                if hint is not None and \
+                        self._refresh_ctx(ctx, tp)["t1_off"] < hint - EPS:
+                    continue
+                alloc = self._allocate_lp_task(task, tp, deadline, ctx)
                 if alloc is not None:
                     unallocated.remove(task)
                     result.allocations.append(alloc)
+                    continue
+                if round_hint is False:
+                    round_hint = self._hint_start(tp)
+                if round_hint is not None:
+                    hints[task.task_id] = round_hint
             # upgrade pass: try to give every allocated task more cores
-            for alloc in result.allocations:
-                self._try_upgrade(alloc)
+            self._upgrade_pass(result.allocations, hints)
 
         result.failed = unallocated
         for t in unallocated:
             t.state = TaskState.FAILED
         self.metrics.t_lp_alloc.append(_time.perf_counter() - t_wall)
         return result
+
+    def _time_point_grid(self, now: float, deadline: float):
+        """The §4 search grid: ``now`` followed by the network-wide
+        completion points up to the deadline — lazily when the calendars
+        support it (requests usually allocate within the first few points,
+        so the rest of the grid is never gathered)."""
+        lazy = getattr(self.state, "iter_completion_times", None)
+        if lazy is not None:
+            return itertools.chain([now], lazy(now, deadline))
+        return [now] + self.state.completion_times(now, deadline)
+
+    def _refresh_ctx(self, ctx: dict, tp: float) -> dict:
+        """(Re)derive the link-dependent placement windows for time-point
+        ``tp``: the allocation-message slot, the resulting ``arrival``, and
+        the offloaded execution start ``t1_off`` (end of the input-transfer
+        slot).  These are identical for every task probed at the same
+        time-point while nothing commits, so they are memoised in ``ctx``
+        (a commit invalidates it).  Probing does not mutate the link."""
+        if ctx.get("valid") and ctx.get("tp") == tp:
+            return ctx
+        net, link = self.net, self.state.link
+        msg_dur = net.slot(net.msg.lp_alloc)
+        msg_t1 = link.earliest_slot(msg_dur, tp)
+        arrival = msg_t1 + msg_dur
+        xfer_dur = net.slot(net.msg.input_transfer)
+        xfer_t1 = link.earliest_slot(xfer_dur, arrival)
+        ctx.clear()
+        ctx.update(tp=tp, valid=True, msg_t1=msg_t1, msg_dur=msg_dur,
+                   arrival=arrival, xfer_dur=xfer_dur, xfer_t1=xfer_t1,
+                   t1_off=xfer_t1 + xfer_dur, feasible=None)
+        return ctx
+
+    def _hint_start(self, tp: float) -> Optional[float]:
+        """Earliest instant ANY device could start a minimum-config LP task,
+        given occupancy as of now.  It is task-independent and a valid lower
+        bound until occupancy *shrinks* (reservations only ever get added
+        during a request sweep; core upgrades are the one shrinking case and
+        `_upgrade_pass` scopes the invalidation).
+
+        A time-point can then be skipped for a hinted task when BOTH of its
+        candidate execution starts — local ``arrival`` and offloaded
+        ``t1_off`` — lie below the bound (``t1_off >= arrival``, so checking
+        ``t1_off`` suffices).  The comparison must use the *actual*
+        link-derived windows of that time-point (`_refresh_ctx`), never
+        ``tp`` itself: link congestion can push the windows far past ``tp``,
+        to where a device has already freed up.  Returns None when the
+        calendars don't support skyline queries (reference implementation)."""
+        devices = self.state.devices
+        if not devices or not hasattr(devices[0], "earliest_fit"):
+            return None
+        cores_min = self.net.lp_core_options[0]
+        proc_min = self.net.lp_slot_time(cores_min)
+        return min(d.earliest_fit(proc_min, tp, cores_min) for d in devices)
+
+    def _upgrade_pass(self, allocations, hints: dict[int, float]) -> list[float]:
+        """Raise core configs where possible, then drop the skip hints a
+        successful upgrade may have invalidated: an upgrade only *frees*
+        capacity in the tail [t_end_new, t_end_old) of its slot, so any
+        newly feasible min-config window must overlap that tail, i.e. start
+        after ``t_end_new - proc_min``.  Hints at or below that threshold
+        remain valid lower bounds regardless of device capacity (with
+        capacity 4 the early part of an upgraded slot is saturated anyway;
+        with larger capacities it need not be, hence the proc_min margin).
+
+        Returns the upgraded allocations' new completion times so the batch
+        sweep can keep its time-point grid in sync (an upgrade moves a
+        completion point earlier; the stale point is already in the grid)."""
+        proc_min = self.net.lp_slot_time(self.net.lp_core_options[0])
+        new_ends: list[float] = []
+        for alloc in allocations:
+            if self._try_upgrade(alloc):
+                new_ends.append(alloc.t_end)
+        if new_ends and hints:
+            thresh = min(new_ends) - proc_min
+            for tid in [t for t, h in hints.items() if h > thresh + EPS]:
+                del hints[tid]
+        return new_ends
+
+    def allocate_low_priority_batch(
+        self, requests: Sequence[LowPriorityRequest], now: float
+    ) -> list[LPResult]:
+        """Admit a burst of LP requests in ONE gc + ONE time-point sweep.
+
+        The sequential path (`allocate_low_priority`) re-derives the
+        network-wide completion-time grid and re-runs the sweep for every
+        request; under a large arrival burst that is O(requests x grid).
+        This method instead:
+
+        * garbage-collects once,
+        * pools every pending task, ordered earliest-deadline-first across
+          the whole batch (deterministic tie-break: submission order),
+        * walks one monotone time-point heap seeded with the current
+          network-wide completion times and fed with the completion points
+          of allocations made *by this batch*, so later tasks immediately
+          see slots freed/created by earlier ones,
+        * prunes a task permanently once the sweep passes its request
+          deadline (it can never allocate at a later point), and
+        * runs the core-upgrade pass per time-point for the requests that
+          progressed there (the batch analogue of the §4 upgrade sweep).
+
+        Results are returned positionally (one LPResult per input request).
+        Per-task placement rules (minimum config, even spreading, upgrade
+        pass) are the sequential path's; the *search* deliberately differs
+        in two ways, so a batch is NOT guaranteed to reproduce sequential
+        admissions call-for-call: requests are interleaved
+        earliest-deadline-first rather than in caller order (the fairer
+        policy at scale), and the grid absorbs completion points created by
+        the batch itself, which the sequential path's snapshot grid never
+        revisits.  Per-request latency metrics are recorded as the batch's
+        amortised share so Fig-9/10 style summaries stay comparable.
+        """
+        t_wall = _time.perf_counter()
+        self.state.gc(now)
+        self._prune_link_slots(now)
+        results = [LPResult() for _ in requests]
+        order = itertools.count()
+        pending: list[tuple[float, int, int, Task]] = []
+        for ridx, req in enumerate(requests):
+            self._requests[req.request_id] = req         # set-health registry
+            for task in req.tasks:
+                if task.state == TaskState.PENDING:
+                    pending.append((req.deadline, next(order), ridx, task))
+        if pending:
+            pending.sort()
+            max_dl = max(req.deadline for req in requests)
+            lazy = getattr(self.state, "iter_completion_times", None)
+            tp_heap = (list(lazy(now, max_dl)) if lazy is not None
+                       else self.state.completion_times(now, max_dl))
+            heapq.heapify(tp_heap)
+            tp = now
+            # Skip hints (see `_hint_start`): a task that failed a full scan
+            # is skipped in O(1) at every time-point whose actual execution
+            # windows lie provably below the earliest instant any device
+            # could start it; a successful core-upgrade shrinks a
+            # reservation, so it prunes the invalidated hints.
+            hints: dict[int, float] = {}
+            ctx: dict = {}                    # shared placement memo (§4 scan)
+            while pending:
+                still: list[tuple[float, int, int, Task]] = []
+                progressed: set[int] = set()
+                round_hint: object = False    # computed lazily, once per tp
+                for item in pending:
+                    deadline, _, ridx, task = item
+                    if deadline <= tp + EPS:
+                        task.state = TaskState.FAILED
+                        results[ridx].failed.append(task)
+                        continue
+                    hint = hints.get(task.task_id)
+                    if hint is not None and \
+                            self._refresh_ctx(ctx, tp)["t1_off"] < hint - EPS:
+                        still.append(item)
+                        continue
+                    alloc = self._allocate_lp_task(task, tp, deadline, ctx)
+                    if alloc is None:
+                        if round_hint is False:
+                            round_hint = self._hint_start(tp)
+                        if round_hint is not None:
+                            hints[task.task_id] = round_hint
+                        still.append(item)
+                        continue
+                    round_hint = False        # occupancy grew; recompute
+                    results[ridx].allocations.append(alloc)
+                    progressed.add(ridx)
+                    if tp + EPS < alloc.t_end < max_dl - EPS:
+                        heapq.heappush(tp_heap, alloc.t_end)
+                for ridx in progressed:
+                    for t_end in self._upgrade_pass(results[ridx].allocations,
+                                                    hints):
+                        # the upgrade moved this completion point earlier;
+                        # the grid must contain the new one too
+                        if tp + EPS < t_end < max_dl - EPS:
+                            heapq.heappush(tp_heap, t_end)
+                pending = still
+                if not pending:
+                    break
+                # Earliest instant any still-pending task could possibly
+                # start (after the upgrade pass pruned stale hints): a grid
+                # point whose actual execution windows lie below it is
+                # provably useless for EVERY pending task, so skip whole
+                # rounds, not just tasks.  As in the per-task skip, the
+                # comparison needs the candidate's link-derived windows,
+                # not the raw grid time.
+                floor_hint: Optional[float] = None
+                for item in pending:
+                    h = hints.get(item[3].task_id)
+                    if h is None:
+                        floor_hint = None
+                        break
+                    if floor_hint is None or h < floor_hint:
+                        floor_hint = h
+                nxt = None
+                while tp_heap:
+                    cand = heapq.heappop(tp_heap)
+                    if cand <= tp + EPS:
+                        continue
+                    if floor_hint is not None and \
+                            self._refresh_ctx(ctx, cand)["t1_off"] < \
+                            floor_hint - EPS:
+                        continue
+                    nxt = cand
+                    break
+                if nxt is None:
+                    break
+                tp = nxt
+            for _, _, ridx, task in pending:      # deadline passed mid-sweep
+                task.state = TaskState.FAILED
+                results[ridx].failed.append(task)
+        share = (_time.perf_counter() - t_wall) / max(len(requests), 1)
+        self.metrics.t_lp_alloc.extend([share] * len(requests))
+        return results
+
+    def _prune_link_slots(self, now: float) -> None:
+        """Drop link-slot records of tasks whose messages all lie in the
+        past.  Amortised O(1): runs only when the registry doubled."""
+        if len(self._link_slots) <= self._link_prune_at:
+            return
+        self._link_slots = {
+            tid: slots
+            for tid, slots in self._link_slots.items()
+            if any(s.t2 > now for s in slots)
+        }
+        self._link_prune_at = max(256, 2 * len(self._link_slots))
 
     def reallocate(self, task: Task, now: float) -> Optional[Allocation]:
         """Public reallocation entry (used by runtimes on external preemption)."""
@@ -247,50 +529,75 @@ class PreemptionAwareScheduler:
         return alloc
 
     def _allocate_lp_task(
-        self, task: Task, tp: float, deadline: float
+        self, task: Task, tp: float, deadline: float,
+        ctx: Optional[dict] = None,
     ) -> Optional[Allocation]:
-        """Partial allocation of one task at the minimum viable config (§4)."""
+        """Partial allocation of one task at the minimum viable config (§4).
+
+        Placement policy (identical outcome to the paper's load-sorted scan,
+        restructured for scale):
+
+        * source device first (no input transfer), else the least-loaded
+          device among those that *fit* — feasibility is checked before
+          computing loads, because ``fits`` is an early-exit skyline probe
+          while ``load`` integrates the whole deadline window, and in a
+          saturated network most devices fail the cheap check;
+        * ``ctx`` (same dict passed across calls of one sweep) memoises the
+          link-derived windows and the network-wide offload feasibility
+          scan, which are identical for every task probed at the same
+          time-point — nothing mutates between two commits, so when a burst
+          of pending tasks wakes at a freed slot, only the first pays the
+          O(devices) scan.  A commit invalidates the context.
+        """
         net, link = self.net, self.state.link
-        msg_dur = net.slot(net.msg.lp_alloc)
-        msg_t1 = link.earliest_slot(msg_dur, tp)
-        arrival = msg_t1 + msg_dur
         cores = net.lp_core_options[0]          # minimum viable config
         proc = net.lp_slot_time(cores)
-        xfer_dur = net.slot(net.msg.input_transfer)
+        if ctx is None:
+            ctx = {}
+        self._refresh_ctx(ctx, tp)
+        msg_t1, msg_dur = ctx["msg_t1"], ctx["msg_dur"]
+        arrival = ctx["arrival"]
+        if arrival + proc > deadline:
+            return None
 
-        # candidate order: source device first, then spread evenly by load
         source = task.source_device
-        others = sorted(
-            (d for d in self.state.devices if d.device != source),
-            key=lambda d: (d.load(arrival, deadline), d.device),
-        )
-        for dev in [self.state.devices[source]] + others:
-            offloaded = dev.device != source
-            if offloaded:
-                xfer_t1 = link.earliest_slot(xfer_dur, arrival)
-                t1 = xfer_t1 + xfer_dur
-            else:
-                xfer_t1 = 0.0
-                t1 = arrival
-            t2 = t1 + proc
-            if t2 > deadline:
-                continue
-            if not dev.fits(t1, t2, cores):
-                continue
-            # commit
-            slots = [link.reserve(msg_t1, msg_t1 + msg_dur, ("lp_alloc", task.task_id))]
-            if offloaded:
-                slots.append(
-                    link.reserve(xfer_t1, xfer_t1 + xfer_dur, ("xfer", task.task_id))
-                )
-            dev.reserve(t1, t2, cores, task)
-            upd_dur = net.slot(net.msg.state_update)
-            slots.append(link.reserve_earliest(upd_dur, t2, ("update", task.task_id)))
-            task.state = TaskState.ALLOCATED
-            task.device, task.cores = dev.device, cores
-            task.t_start, task.t_end, task.offloaded = t1, t2, offloaded
-            return Allocation(task, dev.device, t1, t2, cores, offloaded, slots)
-        return None
+        sdev = self.state.devices[source]
+        if sdev.fits(arrival, arrival + proc, cores):
+            dev, offloaded, xfer_t1, xfer_dur, t1 = sdev, False, 0.0, 0.0, arrival
+        else:
+            xfer_t1, xfer_dur = ctx["xfer_t1"], ctx["xfer_dur"]
+            t1 = ctx["t1_off"]
+            if t1 + proc > deadline:
+                return None
+            if ctx["feasible"] is None:
+                # All offloaded candidates share the same transfer slot,
+                # hence the same execution window and feasibility scan.
+                ctx["feasible"] = [
+                    d for d in self.state.devices if d.fits(t1, t1 + proc, cores)
+                ]
+            cands = [d for d in ctx["feasible"] if d.device != source]
+            if not cands:
+                return None
+            # even spreading: least load over the deadline window
+            dev = min(cands, key=lambda d: (d.load(arrival, deadline), d.device))
+            offloaded = True
+
+        # commit (mutates the link and a device calendar -> context dies)
+        ctx["valid"] = False
+        t2 = t1 + proc
+        slots = [link.reserve(msg_t1, msg_t1 + msg_dur, ("lp_alloc", task.task_id))]
+        if offloaded:
+            slots.append(
+                link.reserve(xfer_t1, xfer_t1 + xfer_dur, ("xfer", task.task_id))
+            )
+        dev.reserve(t1, t2, cores, task)
+        upd_dur = net.slot(net.msg.state_update)
+        slots.append(link.reserve_earliest(upd_dur, t2, ("update", task.task_id)))
+        task.state = TaskState.ALLOCATED
+        task.device, task.cores = dev.device, cores
+        task.t_start, task.t_end, task.offloaded = t1, t2, offloaded
+        self._link_slots[task.task_id] = slots
+        return Allocation(task, dev.device, t1, t2, cores, offloaded, slots)
 
     def _try_upgrade(self, alloc: Allocation) -> bool:
         """Improve an allocation by raising its core configuration (§4)."""

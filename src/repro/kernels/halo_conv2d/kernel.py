@@ -1,7 +1,7 @@
 """Pallas TPU kernel: halo-partitioned conv block (paper §3.2, TPU-native).
 
 The paper tiles conv inputs across RPi cores and exchanges only tile borders
-between consecutive conv layers.  TPU adaptation (DESIGN.md §3): tiles live
+between consecutive conv layers.  TPU adaptation (DESIGN.md §8.5): tiles live
 in VMEM; the halo exchange becomes the overlapping-tile gather done once in
 HBM (ops.py), and the kernel processes a whole multi-conv block per tile
 without leaving VMEM — the halo shrinks by one ring per 3x3 layer, exactly

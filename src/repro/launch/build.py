@@ -33,7 +33,7 @@ from ..training.steps import make_prefill_step, make_serve_step, make_train_step
 def adapt_config(cfg: ModelConfig, shape: InputShape,
                  dtype: str = "bfloat16") -> ModelConfig:
     """Apply the shape policy: long_500k switches attention archs to the
-    sliding-window variant (sub-quadratic requirement, DESIGN.md §4)."""
+    sliding-window variant (sub-quadratic requirement, DESIGN.md §8.4)."""
     cfg = replace(cfg, param_dtype=dtype, activation_dtype=dtype)
     if shape.name == "long_500k" and cfg.uses_attention:
         cfg = cfg.with_sliding_window(cfg.long_context_window)

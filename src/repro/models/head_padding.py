@@ -1,4 +1,4 @@
-"""Head padding for TPU-friendly attention sharding (§Perf, DESIGN.md §5).
+"""Head padding for TPU-friendly attention sharding (§Perf, DESIGN.md §8.3).
 
 Several assigned archs have head counts that don't divide the model mesh
 axis (llava 56q/8kv, qwen2 14q/2kv, smollm 9q/3kv on model=16), so the

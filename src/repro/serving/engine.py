@@ -124,13 +124,65 @@ class PreemptiveServingEngine:
         req.arrival = self.q.now
         self.q.push(self.q.now, lambda: self._admit(req))
 
+    def submit_batch(self, reqs: list[ServeRequest]) -> None:
+        """Admit a burst of requests at the same virtual instant.
+
+        LP requests go through the scheduler's batch API (one gc + one
+        time-point sweep across the whole burst — DESIGN.md §4.3); HP
+        requests keep per-request admission, since each may preempt and must
+        observe the link state its predecessors left behind.
+        """
+        lp = [r for r in reqs if r.priority == Priority.LOW]
+        for r in reqs:
+            if r.priority == Priority.HIGH:
+                self.submit(r)
+        if lp:
+            for r in lp:
+                r.arrival = self.q.now
+            self.q.push(self.q.now, lambda: self._admit_lp_batch(lp))
+
+    def _make_lp(self, req: ServeRequest, now: float) -> LowPriorityRequest:
+        """Wrap a serve request as a one-task LP request and register it."""
+        self.metrics.lp_generated += 1
+        self.metrics.lp_requests_total += 1
+        lp = LowPriorityRequest(
+            source_device=req.home_slice, deadline=req.deadline,
+            frame_id=req.rid, n_tasks=1, created_at=now)
+        lp.make_tasks()
+        task = lp.tasks[0]
+        self._by_task[task] = req
+        req.task = task
+        return lp
+
+    def _settle_lp(self, req: ServeRequest, res) -> None:
+        """Record one LP admission outcome and arm execution on success."""
+        if res.failed:
+            req.state = "failed"
+            self.metrics.lp_failed_alloc += 1
+            self.done.append(req)
+            return
+        self.metrics.lp_allocated += 1
+        alloc = res.allocations[0]
+        if alloc.offloaded:
+            self.metrics.lp_offloaded += 1
+        bucket = (self.metrics.core_alloc_offloaded if alloc.offloaded
+                  else self.metrics.core_alloc_local)
+        bucket[alloc.cores] += 1
+        self._arm(alloc.task)
+
+    def _admit_lp_batch(self, reqs: list[ServeRequest]) -> None:
+        now = self.q.now
+        lps = [self._make_lp(req, now) for req in reqs]
+        for req, res in zip(reqs, self.sched.allocate_low_priority_batch(lps, now)):
+            self._settle_lp(req, res)
+
     def _admit(self, req: ServeRequest) -> None:
         now = self.q.now
-        task = Task(priority=req.priority, source_device=req.home_slice,
-                    deadline=req.deadline, frame_id=req.rid)
-        req.task = task
-        self._by_task[task] = req
         if req.priority == Priority.HIGH:
+            task = Task(priority=req.priority, source_device=req.home_slice,
+                        deadline=req.deadline, frame_id=req.rid)
+            req.task = task
+            self._by_task[task] = req
             self.metrics.hp_generated += 1
             res = self.sched.allocate_high_priority(task, now)
             if not res.success:
@@ -142,29 +194,8 @@ class PreemptiveServingEngine:
             for re_alloc in res.reallocations:
                 self._arm(re_alloc.task)
         else:
-            self.metrics.lp_generated += 1
-            self.metrics.lp_requests_total += 1
-            lp = LowPriorityRequest(
-                source_device=req.home_slice, deadline=req.deadline,
-                frame_id=req.rid, n_tasks=1, created_at=now)
-            lp.make_tasks()
-            task_lp = lp.tasks[0]
-            self._by_task[task_lp] = req
-            req.task = task_lp
-            res = self.sched.allocate_low_priority(lp, now)
-            if res.failed:
-                req.state = "failed"
-                self.metrics.lp_failed_alloc += 1
-                self.done.append(req)
-                return
-            self.metrics.lp_allocated += 1
-            alloc = res.allocations[0]
-            if alloc.offloaded:
-                self.metrics.lp_offloaded += 1
-            bucket = (self.metrics.core_alloc_offloaded if alloc.offloaded
-                      else self.metrics.core_alloc_local)
-            bucket[alloc.cores] += 1
-            self._arm(task_lp)
+            lp = self._make_lp(req, now)
+            self._settle_lp(req, self.sched.allocate_low_priority(lp, now))
 
     # ------------------------------------------------------------------ #
     # Execution (real compute at virtual-time slot boundaries)            #

@@ -1,6 +1,13 @@
 from .events import EventQueue
 from .traces import TraceConfig, generate_trace, potential_counts
 from .experiment import ScenarioConfig, run_scenario, SCENARIOS
+from .scenarios import (
+    LargeNConfig,
+    generate_arrivals,
+    run_large_n,
+    sweep_devices,
+    sweep_mix,
+)
 
 __all__ = [
     "EventQueue",
@@ -10,4 +17,9 @@ __all__ = [
     "ScenarioConfig",
     "run_scenario",
     "SCENARIOS",
+    "LargeNConfig",
+    "generate_arrivals",
+    "run_large_n",
+    "sweep_devices",
+    "sweep_mix",
 ]

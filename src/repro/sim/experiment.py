@@ -45,6 +45,10 @@ class ScenarioConfig:
     # "farthest_deadline" (paper §4) | "weakest_set" (paper §8 proposal,
     # beyond-paper — see EXPERIMENTS.md §Beyond-paper scheduling)
     victim_policy: str = "farthest_deadline"
+    # Controller-side LP batching (beyond-paper, DESIGN.md §4.3): LP requests
+    # arriving within this window are admitted through ONE batch sweep
+    # (`allocate_low_priority_batch`).  0 = the paper's per-request path.
+    lp_batch_window: float = 0.0
 
 
 # The paper's evaluated scenarios (Table 1 legend).
@@ -205,6 +209,8 @@ class SchedulerBackend:
         self._exec_events: dict[Task, Event] = {}
         self._frames_by_hp: dict[Task, Frame] = {}
         self._via_preemption: set[Task] = set()
+        self._lp_buffer: list[LowPriorityRequest] = []
+        self._lp_flush_armed = False
 
     # -- requests --------------------------------------------------------- #
     def hp_request(self, frame: Frame) -> None:
@@ -230,7 +236,25 @@ class SchedulerBackend:
             self._schedule_exec(re)
 
     def lp_request(self, req: LowPriorityRequest) -> None:
-        res = self.sched.allocate_low_priority(req, self.rt.q.now)
+        window = self.rt.cfg.lp_batch_window
+        if window <= 0.0:
+            self._account_lp(self.sched.allocate_low_priority(req, self.rt.q.now))
+            return
+        # batching mode: buffer, admit every request of the window together
+        self._lp_buffer.append(req)
+        if not self._lp_flush_armed:
+            self._lp_flush_armed = True
+            self.rt.q.push(self.rt.q.now + window, self._flush_lp_batch)
+
+    def _flush_lp_batch(self) -> None:
+        self._lp_flush_armed = False
+        batch, self._lp_buffer = self._lp_buffer, []
+        if not batch:
+            return
+        for res in self.sched.allocate_low_priority_batch(batch, self.rt.q.now):
+            self._account_lp(res)
+
+    def _account_lp(self, res) -> None:
         m = self.rt.metrics
         m.lp_failed_alloc += len(res.failed)
         for alloc in res.allocations:

@@ -19,6 +19,14 @@ Table 4's potential-task counts (see DESIGN.md §7):
                   X=4: b=0.4446, c=0.1518   (13941)
                 All satisfy the paper's "devices will predominantly
                 generate X tasks" (b >> c).
+
+Beyond the paper (used by the large-N scenario suite, sim/scenarios.py):
+  ratio_P     : HP:LP mix sweep.  P(-1) = 0.05; of the detected frames, a
+                fraction P/100 spawns an LP set (sizes 1..4 uniform) and the
+                rest stay HP-only:
+                  P(0) = 0.95 * (1 - P/100),   P(k in 1..4) = 0.95 * P/400.
+                ratio_0 is an HP-only stream, ratio_100 makes every detected
+                frame spawn stage-3 work.
 """
 from __future__ import annotations
 
@@ -58,6 +66,16 @@ class TraceConfig:
             p[0] = p[1] = 0.05          # -1 and 0
             p[1 + x] = b
             p /= p.sum()                # exact normalisation
+            return p
+        if self.name.startswith("ratio_"):
+            pct = float(self.name.split("_")[1])
+            assert 0.0 <= pct <= 100.0
+            f = pct / 100.0
+            p = np.empty(6)
+            p[0] = 0.05                 # -1: nothing detected
+            p[1] = 0.95 * (1.0 - f)     # 0: HP only
+            p[2:] = 0.95 * f / 4.0      # 1..4: HP + LP set
+            p /= p.sum()
             return p
         raise ValueError(f"unknown trace: {self.name}")
 

@@ -1,8 +1,14 @@
-"""Calendar invariants: unit + hypothesis property tests."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+"""Calendar invariants: unit tests + seeded randomized property tests.
 
-from repro.core.calendar import DeviceCalendar, LinkCalendar, NetworkState
+(The seed repo used hypothesis here; the container image does not ship it,
+so the property tests are plain seeded-``random`` sweeps — same invariants,
+deterministic corpus.)
+"""
+import random
+
+import pytest
+
+from repro.core.calendar import DeviceCalendar, LinkCalendar, NetworkState, Reservation
 
 
 def test_link_earliest_slot_empty():
@@ -20,46 +26,30 @@ def test_link_slots_never_overlap_sequential():
         assert a.t2 <= b.t1 + 1e-9
 
 
-@settings(max_examples=200, deadline=None)
-@given(
-    st.lists(
-        st.tuples(
-            st.floats(0.01, 5.0),     # duration
-            st.floats(0.0, 20.0),     # not_before
-        ),
-        min_size=1,
-        max_size=30,
-    )
-)
-def test_link_no_overlap_property(requests):
+@pytest.mark.parametrize("seed", range(20))
+def test_link_no_overlap_property(seed):
     """No two link reservations ever overlap, regardless of request order."""
+    rng = random.Random(seed)
     link = LinkCalendar()
-    for dur, nb in requests:
-        link.reserve_earliest(dur, nb)
+    n = rng.randint(1, 30)
+    for _ in range(n):
+        link.reserve_earliest(rng.uniform(0.01, 5.0), rng.uniform(0.0, 20.0))
     res = sorted(link._res, key=lambda r: r.t1)
     for a, b in zip(res, res[1:]):
         assert a.t2 <= b.t1 + 1e-9
-    # and every reservation respects its not_before
-    assert len(res) == len(requests)
+    assert len(res) == n
 
 
-@settings(max_examples=200, deadline=None)
-@given(
-    st.lists(
-        st.tuples(
-            st.floats(0.0, 50.0),              # t1
-            st.floats(0.1, 10.0),              # duration
-            st.integers(1, 4),                 # cores
-        ),
-        min_size=1,
-        max_size=40,
-    )
-)
-def test_device_capacity_property(reqs):
+@pytest.mark.parametrize("seed", range(20))
+def test_device_capacity_property(seed):
     """fits() + reserve() never exceeds device capacity at any instant."""
+    rng = random.Random(1000 + seed)
     dev = DeviceCalendar(0, capacity=4)
     admitted = []
-    for i, (t1, dur, cores) in enumerate(reqs):
+    for i in range(rng.randint(1, 40)):
+        t1 = rng.uniform(0.0, 50.0)
+        dur = rng.uniform(0.1, 10.0)
+        cores = rng.randint(1, 4)
         if dev.fits(t1, t1 + dur, cores):
             dev.reserve(t1, t1 + dur, cores, tag=i)
             admitted.append((t1, t1 + dur, cores))
@@ -92,3 +82,128 @@ def test_completion_times_sorted_unique():
     state.devices[0].reserve(1.0, 4.0, 2, "z")
     pts = state.completion_times(0.0, 10.0)
     assert pts == sorted(set(pts)) == [3.0, 4.0]
+    assert list(state.iter_completion_times(0.0, 10.0)) == pts
+
+
+# --------------------------------------------------------------------- #
+# Edge cases of the skyline implementation                              #
+# --------------------------------------------------------------------- #
+def test_link_cancel_nonexistent_is_noop():
+    link = LinkCalendar()
+    r = link.reserve_earliest(1.0, 0.0)
+    ghost = Reservation(50.0, 51.0, 1, "ghost")      # never reserved
+    link.cancel(ghost)
+    assert len(link) == 1
+    link.cancel(r)
+    assert len(link) == 0
+    link.cancel(r)                                    # double-cancel: no-op
+    assert len(link) == 0
+    assert link.earliest_slot(1.0, 0.0) == 0.0
+
+
+def test_device_release_nonexistent_is_noop():
+    dev = DeviceCalendar(0)
+    assert dev.release("ghost") is None
+    dev.reserve(0.0, 5.0, 2, "a")
+    assert dev.release("ghost") is None
+    assert dev.max_usage(0.0, 5.0) == 2
+
+
+def test_device_gc_keeps_inflight_reservation():
+    """gc(now) with a reservation straddling `now` must keep its remaining
+    interval fully counted."""
+    dev = DeviceCalendar(0, capacity=4)
+    dev.reserve(0.0, 10.0, 3, tag="run")
+    dev.reserve(0.0, 2.0, 1, tag="done")
+    dev.gc(5.0)
+    assert len(dev) == 1                       # "done" retired, "run" alive
+    assert dev.get("run") is not None
+    assert dev.max_usage(5.0, 10.0) == 3
+    assert dev.fits(5.0, 10.0, 1)
+    assert not dev.fits(5.0, 10.0, 2)
+    # the straddler can still be released after gc
+    dev.release("run")
+    assert dev.fits(5.0, 10.0, 4)
+    assert dev.max_usage(5.0, 10.0) == 0
+
+
+def test_link_gc_keeps_inflight_slot():
+    link = LinkCalendar()
+    r = link.reserve(0.0, 10.0, "xfer")
+    link.reserve(0.0, 1.0, "done")
+    link.gc(5.0)
+    assert len(link) == 1
+    assert link.earliest_slot(1.0, 5.0) == pytest.approx(10.0)
+    link.cancel(r)
+    assert link.earliest_slot(1.0, 5.0) == 5.0
+
+
+def test_truncate_to_before_start_removes():
+    dev = DeviceCalendar(0)
+    dev.reserve(5.0, 10.0, 2, tag="a")
+    dev.truncate("a", 3.0)                     # before t1 -> gone entirely
+    assert dev.get("a") is None
+    assert len(dev) == 0
+    assert dev.max_usage(0.0, 20.0) == 0
+    assert dev.completion_times(0.0, 20.0) == []
+
+
+def test_truncate_exactly_at_start_removes():
+    dev = DeviceCalendar(0)
+    dev.reserve(5.0, 10.0, 2, tag="a")
+    dev.truncate("a", 5.0)
+    assert dev.get("a") is None
+    assert dev.max_usage(0.0, 20.0) == 0
+
+
+def test_truncate_beyond_end_is_noop():
+    dev = DeviceCalendar(0)
+    dev.reserve(5.0, 10.0, 2, tag="a")
+    dev.truncate("a", 12.0)
+    r = dev.get("a")
+    assert r is not None and r.t2 == 10.0
+    assert dev.completion_times(0.0, 20.0) == [10.0]
+
+
+def test_reserve_same_tag_replaces():
+    """Re-reserving a tag replaces the old interval (dict-overwrite
+    semantics of the seed implementation)."""
+    dev = DeviceCalendar(0, capacity=4)
+    dev.reserve(0.0, 10.0, 4, tag="a")
+    dev.reserve(20.0, 30.0, 2, tag="a")
+    assert len(dev) == 1
+    assert dev.max_usage(0.0, 10.0) == 0       # old interval fully released
+    assert dev.max_usage(20.0, 30.0) == 2
+    assert dev.completion_times(0.0, 50.0) == [30.0]
+
+
+def test_skyline_coalesces_after_churn():
+    """Reserve/release churn must not leak breakpoints (the skyline stays
+    minimal, which is what keeps queries O(log n + window))."""
+    dev = DeviceCalendar(0, capacity=4)
+    for i in range(200):
+        dev.reserve(float(i % 7), float(i % 7) + 1.5, 1 + i % 2, tag=i)
+    for i in range(200):
+        dev.release(i)
+    assert dev.max_usage(0.0, 100.0) == 0
+    assert len(dev._sky.times) == 1            # fully coalesced to sentinel
+    assert dev._t2s == []
+
+
+def test_device_load_matches_manual_integral():
+    dev = DeviceCalendar(0, capacity=4)
+    dev.reserve(0.0, 10.0, 2, "a")             # 20 core-s
+    dev.reserve(5.0, 15.0, 1, "b")             # 10 core-s
+    assert dev.load(0.0, 15.0) == pytest.approx(30.0)
+    assert dev.load(0.0, 5.0) == pytest.approx(10.0)
+    assert dev.load(5.0, 10.0) == pytest.approx(15.0)
+    assert dev.load(20.0, 30.0) == 0.0
+
+
+def test_earliest_fit_device():
+    dev = DeviceCalendar(0, capacity=4)
+    dev.reserve(0.0, 10.0, 4, "full")
+    dev.reserve(10.0, 20.0, 2, "half")
+    assert dev.earliest_fit(1.0, 0.0, 4) == pytest.approx(20.0)
+    assert dev.earliest_fit(1.0, 0.0, 2) == pytest.approx(10.0)
+    assert dev.earliest_fit(1.0, 12.0, 2) == pytest.approx(12.0)

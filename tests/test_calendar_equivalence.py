@@ -1,0 +1,117 @@
+"""Differential testing: the skyline calendars must answer exactly like the
+seed's O(n) reference implementation on randomized reservation sequences.
+
+Contract under test (see calendar.py module docstring): after ``gc(now)``
+both implementations are only queried with windows at or after ``now`` —
+that is how the scheduler uses them (it garbage-collects to controller time
+before probing).
+"""
+import random
+
+import pytest
+
+from repro.core.calendar import DeviceCalendar, LinkCalendar, NetworkState
+from repro.core.calendar_reference import (
+    ReferenceDeviceCalendar,
+    ReferenceLinkCalendar,
+    ReferenceNetworkState,
+)
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_device_calendar_equivalence(seed):
+    rng = random.Random(seed)
+    new = DeviceCalendar(0, 4)
+    ref = ReferenceDeviceCalendar(0, 4)
+    live = []
+    now = 0.0
+    for op in range(80):
+        c = rng.random()
+        if c < 0.45 or not live:
+            t1 = now + rng.uniform(0, 30)
+            dur = rng.uniform(0.05, 10)
+            cores = rng.choice([1, 2, 4])
+            tag = (seed, op)
+            new.reserve(t1, t1 + dur, cores, tag)
+            ref.reserve(t1, t1 + dur, cores, tag)
+            live.append(tag)
+        elif c < 0.60:
+            tag = live.pop(rng.randrange(len(live)))
+            assert (new.release(tag) is None) == (ref.release(tag) is None)
+        elif c < 0.70:
+            tag = rng.choice(live)
+            r = ref.get(tag)
+            t_end = rng.uniform(r.t1 - 1.0, r.t2 + 1.0)
+            new.truncate(tag, t_end)
+            ref.truncate(tag, t_end)
+            if ref.get(tag) is None:
+                live.remove(tag)
+        elif c < 0.80:
+            now += rng.uniform(0, 10)
+            new.gc(now)
+            ref.gc(now)
+            live = [t for t in live if ref.get(t) is not None]
+        # queries, always at/after the gc horizon
+        q1 = now + rng.uniform(0, 40)
+        q2 = q1 + rng.uniform(0.01, 20)
+        assert new.max_usage(q1, q2) == ref.max_usage(q1, q2)
+        assert new.free_cores(q1, q2) == ref.free_cores(q1, q2)
+        for cores in (1, 2, 4):
+            assert new.fits(q1, q2, cores) == ref.fits(q1, q2, cores)
+        assert new.load(q1, q2) == pytest.approx(ref.load(q1, q2), abs=1e-6)
+        assert new.completion_times(q1, q2) == ref.completion_times(q1, q2)
+        assert len(new) == len(ref)
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_link_calendar_equivalence(seed):
+    rng = random.Random(10_000 + seed)
+    new = LinkCalendar()
+    ref = ReferenceLinkCalendar()
+    pairs = []
+    now = 0.0
+    for op in range(80):
+        c = rng.random()
+        if c < 0.60 or not pairs:
+            dur = rng.uniform(0.01, 3.0)
+            nb = now + rng.uniform(0, 20)
+            a = new.reserve_earliest(dur, nb, op)
+            b = ref.reserve_earliest(dur, nb, op)
+            assert a.t1 == pytest.approx(b.t1, abs=1e-12)
+            pairs.append((a, b))
+        elif c < 0.75:
+            a, b = pairs.pop(rng.randrange(len(pairs)))
+            new.cancel(a)
+            ref.cancel(b)
+        elif c < 0.85:
+            now += rng.uniform(0, 8)
+            new.gc(now)
+            ref.gc(now)
+            pairs = [(a, b) for a, b in pairs if b.t2 > now]
+        q = now + rng.uniform(0, 30)
+        dur = rng.uniform(0.01, 4.0)
+        assert new.earliest_slot(dur, q) == pytest.approx(
+            ref.earliest_slot(dur, q), abs=1e-12
+        )
+        assert len(new) == len(ref)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_network_state_completion_times_equivalence(seed):
+    rng = random.Random(77 + seed)
+    n_dev = rng.randint(2, 6)
+    new = NetworkState(n_dev)
+    ref = ReferenceNetworkState(n_dev)
+    for i in range(60):
+        d = rng.randrange(n_dev)
+        t1 = rng.uniform(0, 50)
+        dur = rng.uniform(0.1, 10)
+        cores = rng.choice([1, 2, 4])
+        new.devices[d].reserve(t1, t1 + dur, cores, i)
+        ref.devices[d].reserve(t1, t1 + dur, cores, i)
+    for _ in range(20):
+        a = rng.uniform(0, 60)
+        b = a + rng.uniform(0, 30)
+        assert new.completion_times(a, b) == ref.completion_times(a, b)
+        assert list(new.iter_completion_times(a, b)) == ref.completion_times(a, b)
+    assert new.total_allocated_tasks() == ref.total_allocated_tasks()

@@ -1,0 +1,99 @@
+"""Large-N scenario suite (sim/scenarios.py): generators + end-to-end runs."""
+import pytest
+
+from repro.core.calendar_reference import ReferenceNetworkState
+from repro.sim.scenarios import (
+    LargeNConfig,
+    generate_arrivals,
+    run_large_n,
+    sweep_devices,
+    sweep_mix,
+)
+
+
+@pytest.mark.parametrize("family", ["poisson", "bursty", "adversarial"])
+def test_arrivals_deterministic_and_sorted(family):
+    cfg = LargeNConfig(name="t", arrival=family, n_devices=8, duration=30.0,
+                       seed=3)
+    a1 = generate_arrivals(cfg)
+    a2 = generate_arrivals(cfg)
+    assert a1 == a2
+    assert a1 == sorted(a1, key=lambda a: (a.t, a.device))
+    assert all(0.0 <= a.t < cfg.duration for a in a1)
+    assert all(0 <= a.device < cfg.n_devices for a in a1)
+    assert all(0 <= a.n_lp_tasks <= 4 for a in a1)
+    # different seed, different stream
+    a3 = generate_arrivals(LargeNConfig(name="t", arrival=family, n_devices=8,
+                                        duration=30.0, seed=4))
+    assert a1 != a3
+
+
+def test_adversarial_waves_are_synchronised():
+    cfg = LargeNConfig(name="t", arrival="adversarial", n_devices=16,
+                       duration=20.0, wave_period=5.0)
+    arrivals = generate_arrivals(cfg)
+    times = sorted({a.t for a in arrivals})
+    assert times == [0.0, 5.0, 10.0, 15.0]
+    for t in times:
+        assert len([a for a in arrivals if a.t == t]) == 16
+
+
+def test_mix_sweep_controls_lp_volume():
+    none = LargeNConfig(name="m0", lp_fraction=0.0, n_devices=8, duration=60.0)
+    full = LargeNConfig(name="m1", lp_fraction=1.0, n_devices=8, duration=60.0)
+    assert all(a.n_lp_tasks == 0 for a in generate_arrivals(none))
+    assert all(a.n_lp_tasks >= 1 for a in generate_arrivals(full))
+
+
+def test_sweep_helpers():
+    base = LargeNConfig(name="s")
+    devs = sweep_devices(base, (4, 256))
+    assert [c.n_devices for c in devs] == [4, 256]
+    assert [c.name for c in devs] == ["s_n4", "s_n256"]
+    mixes = sweep_mix(base, (0.0, 1.0))
+    assert [c.lp_fraction for c in mixes] == [0.0, 1.0]
+
+
+def test_unknown_arrival_family_rejected():
+    with pytest.raises(ValueError):
+        LargeNConfig(name="x", arrival="nope")
+
+
+def test_run_large_n_end_to_end_small():
+    cfg = LargeNConfig(name="e2e", n_devices=8, duration=40.0, seed=1)
+    s = run_large_n(cfg)
+    assert s["n_arrivals"] == s["hp_admitted"] + s["hp_failed"] > 0
+    assert s["lp_allocated"] + s["lp_failed"] > 0
+    assert s["hp_alloc_us_mean"] > 0
+
+
+def test_run_large_n_256_devices_mixed_end_to_end():
+    """The acceptance scenario: 256 devices, mixed HP/LP workload, batched
+    admission, runs end to end."""
+    cfg = LargeNConfig(name="big", n_devices=256, duration=10.0,
+                       lp_fraction=0.6, seed=0)
+    s = run_large_n(cfg, batch_window=0.25)
+    assert s["n_devices"] == 256
+    assert s["hp_admitted"] > 0
+    assert s["lp_allocated"] > 0
+    assert s["wall_s"] < 60.0
+
+
+def test_run_large_n_batch_matches_request_level_totals():
+    """Batched and per-request admission must conserve tasks."""
+    cfg = LargeNConfig(name="cmp", n_devices=16, duration=40.0, seed=2)
+    a = run_large_n(cfg)
+    b = run_large_n(cfg, batch_window=0.25)
+    assert a["lp_allocated"] + a["lp_failed"] == b["lp_allocated"] + b["lp_failed"]
+    assert a["n_arrivals"] == b["n_arrivals"]
+
+
+def test_run_large_n_reference_state_equivalence():
+    """The same scenario on the seed calendars yields identical admission
+    decisions (the optimisation changed the cost, not the policy)."""
+    cfg = LargeNConfig(name="ref", n_devices=8, duration=40.0, seed=5)
+    new = run_large_n(cfg)
+    ref = run_large_n(cfg, state=ReferenceNetworkState(8))
+    for key in ("hp_admitted", "hp_failed", "lp_allocated", "lp_failed",
+                "preemptions", "realloc_success", "realloc_failure"):
+        assert new[key] == ref[key], key

@@ -194,6 +194,116 @@ def test_weakest_set_victim_policy():
         assert is_weak == expect_weak, (policy, victim.request_id)
 
 
+def test_preemption_cancels_victim_link_slots():
+    """Seed bug regression: a preempted victim's pending xfer/update link
+    slots must be cancelled, or the shared link permanently inflates with
+    traffic for a task that will never run in that slot."""
+    state, net, sched = make(n_devices=2)
+    # fill the victim's source device so its request offloads to device 1
+    blocker = lp_request(dev=0, deadline=200.0)
+    state.devices[0].reserve(0.0, 100.0, 4, blocker.tasks[0])
+    victim_req = lp_request(dev=0, deadline=60.0, frame=1)
+    res = sched.allocate_low_priority(victim_req, 0.0)
+    [alloc] = res.allocations
+    assert alloc.offloaded and alloc.device == 1
+    victim = victim_req.tasks[0]
+    tags = [s.tag for s in state.link.reservations()]
+    assert ("xfer", victim.task_id) in tags
+    assert ("update", victim.task_id) in tags
+
+    # block the remaining cores of device 1 with another (farther-deadline
+    # safe) LP reservation, then force preemption with a tight HP task
+    filler = lp_request(dev=1, deadline=55.0, frame=2)
+    state.devices[1].reserve(alloc.t_start, alloc.t_end, 2, filler.tasks[0])
+    hp = hp_task(dev=1, deadline=3.0)
+    hp_res = sched.allocate_high_priority(hp, 0.0)
+    assert hp_res.success
+    assert victim in hp_res.preempted
+
+    tags = [s.tag for s in state.link.reservations()]
+    assert ("xfer", victim.task_id) not in tags
+    assert ("update", victim.task_id) not in tags
+    # reallocation (if any) re-reserves fresh slots for the victim
+    for re in hp_res.reallocations:
+        if re.task is victim:
+            assert ("update", victim.task_id) in [
+                s.tag for s in state.link.reservations()
+            ]
+
+
+def test_lp_grid_is_snapshot_of_entry_state():
+    """Regression: the §4 search grid must be the completion times as of
+    request entry — allocations committed DURING the sweep must not add new
+    grid points (the seed's snapshot semantics; a lazily-materialised grid
+    once leaked the first round's commits into it).  With one device, two
+    background cores and a 2-task request, task A commits at now and ends
+    inside the deadline window; the seed never probes A's completion, so
+    task B must fail — on both calendar implementations."""
+    from repro.core.calendar_reference import ReferenceNetworkState
+
+    for make_state in (lambda: NetworkState(1), lambda: ReferenceNetworkState(1)):
+        state = make_state()
+        net = NetworkConfig()
+        sched = PreemptionAwareScheduler(state, net)
+        state.devices[0].reserve(0.0, 1000.0, 2, "background")
+        req = lp_request(dev=0, deadline=120.0, n=2)
+        res = sched.allocate_low_priority(req, 0.0)
+        assert len(res.allocations) == 1, type(state).__name__
+        assert len(res.failed) == 1, type(state).__name__
+
+
+def test_skip_hint_respects_link_delayed_windows():
+    """Regression: the skip-hint pruning must compare the hint against the
+    time-point's ACTUAL link-derived execution windows, not the raw grid
+    time.  Here the link is busy until just before t=100, so probing at
+    grid point t=50 actually yields arrival = 100.0 — exactly when the
+    source device frees up.  A tp-based skip would discard that point and
+    fail a perfectly schedulable task."""
+    state, net, sched = make(n_devices=2)
+    msg_dur = net.slot(net.msg.lp_alloc)
+    # source device: 3/4 cores busy on [0, 100); one reservation ends at 50
+    # so the search grid contains a point strictly between now and 100
+    state.devices[0].reserve(0.0, 100.0, 2, "busyA")
+    state.devices[0].reserve(0.0, 50.0, 1, "busyB")
+    # other device: fully busy past the deadline
+    state.devices[1].reserve(0.0, 130.0, 4, "busyC")
+    # link: free only in [0, msg_dur) and [100 - msg_dur, 100)
+    state.link.reserve(msg_dur, 100.0 - msg_dur, "jam1")
+    state.link.reserve(100.0, 140.0, "jam2")
+
+    req = lp_request(dev=0, deadline=120.0)
+    res = sched.allocate_low_priority(req, 0.0)
+    assert len(res.allocations) == 1, "hint pruning skipped a feasible point"
+    a = res.allocations[0]
+    assert a.device == 0 and not a.offloaded
+    assert a.t_start == pytest.approx(100.0)
+    # the seed implementation admits identically
+    from repro.core.calendar_reference import ReferenceNetworkState
+    ref_state = ReferenceNetworkState(2)
+    ref_sched = PreemptionAwareScheduler(ref_state, net)
+    ref_state.devices[0].reserve(0.0, 100.0, 2, "busyA")
+    ref_state.devices[0].reserve(0.0, 50.0, 1, "busyB")
+    ref_state.devices[1].reserve(0.0, 130.0, 4, "busyC")
+    ref_state.link.reserve(msg_dur, 100.0 - msg_dur, "jam1")
+    ref_state.link.reserve(100.0, 140.0, "jam2")
+    ref_req = lp_request(dev=0, deadline=120.0, frame=9)
+    ref_res = ref_sched.allocate_low_priority(ref_req, 0.0)
+    assert len(ref_res.allocations) == 1
+    assert ref_res.allocations[0].t_start == pytest.approx(a.t_start)
+
+    # batch path: same scenario, same admission
+    state2, _, sched2 = make(n_devices=2)
+    state2.devices[0].reserve(0.0, 100.0, 2, "busyA")
+    state2.devices[0].reserve(0.0, 50.0, 1, "busyB")
+    state2.devices[1].reserve(0.0, 130.0, 4, "busyC")
+    state2.link.reserve(msg_dur, 100.0 - msg_dur, "jam1")
+    state2.link.reserve(100.0, 140.0, "jam2")
+    breq = lp_request(dev=0, deadline=120.0, frame=10)
+    [bres] = sched2.allocate_low_priority_batch([breq], 0.0)
+    assert len(bres.allocations) == 1
+    assert bres.allocations[0].t_start == pytest.approx(100.0)
+
+
 def test_set_health_request_id_zero():
     """Regression guard: request_id == 0 must still hit the registry
     (truthiness bug bait)."""

@@ -1,5 +1,5 @@
-"""Hypothesis property tests: the scheduler's system invariants hold for
-arbitrary interleaved HP/LP request streams (§4).
+"""Property tests: the scheduler's system invariants hold for arbitrary
+interleaved HP/LP request streams (§4).
 
 Invariants:
   I1  capacity: no device ever has core demand above its capacity.
@@ -9,9 +9,13 @@ Invariants:
       always execute on their source device with exactly one core.
   I5  accounting: preemptions == metrics count; realloc successes+failures
       == number of victims.
+
+(The seed repo used hypothesis here; the container image does not ship it,
+so the streams are seeded-``random`` draws — same invariants.)
 """
-import hypothesis.strategies as st
-from hypothesis import given, settings
+import random
+
+import pytest
 
 from repro.core.calendar import NetworkState
 from repro.core.network import NetworkConfig
@@ -20,12 +24,18 @@ from repro.core.task import LowPriorityRequest, Priority, Task
 
 N_DEV = 4
 
-event_st = st.tuples(
-    st.sampled_from(["hp", "lp"]),
-    st.integers(0, N_DEV - 1),            # source device
-    st.floats(0.0, 40.0),                 # arrival offset
-    st.integers(1, 4),                    # LP set size (ignored for HP)
-)
+
+def _random_events(rng: random.Random):
+    n = rng.randint(1, 25)
+    return [
+        (
+            rng.choice(["hp", "lp"]),
+            rng.randrange(N_DEV),            # source device
+            rng.uniform(0.0, 40.0),          # arrival offset
+            rng.randint(1, 4),               # LP set size (ignored for HP)
+        )
+        for _ in range(n)
+    ]
 
 
 def _check_invariants(state: NetworkState, net: NetworkConfig) -> None:
@@ -43,10 +53,11 @@ def _check_invariants(state: NetworkState, net: NetworkConfig) -> None:
         assert a.t2 <= b.t1 + 1e-9, (a, b)
 
 
-@settings(max_examples=40, deadline=None)
-@given(st.lists(event_st, min_size=1, max_size=25),
-       st.booleans())
-def test_scheduler_invariants_random_streams(events, preemption):
+@pytest.mark.parametrize("preemption", [True, False])
+@pytest.mark.parametrize("seed", range(20))
+def test_scheduler_invariants_random_streams(seed, preemption):
+    rng = random.Random(seed * 31 + preemption)
+    events = _random_events(rng)
     state = NetworkState(N_DEV)
     net = NetworkConfig()
     sched = PreemptionAwareScheduler(state, net, preemption=preemption)
@@ -83,3 +94,30 @@ def test_scheduler_invariants_random_streams(events, preemption):
     assert m.realloc_success + m.realloc_failure == victims
     if not preemption:
         assert victims == 0
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_batch_admission_invariants_random_streams(seed):
+    """The batch path upholds I1-I3 for random request bursts, and every
+    task lands in exactly one of allocations/failed."""
+    rng = random.Random(5000 + seed)
+    state = NetworkState(N_DEV)
+    net = NetworkConfig()
+    sched = PreemptionAwareScheduler(state, net)
+    now = rng.uniform(0.0, 10.0)
+    reqs = []
+    for _ in range(rng.randint(1, 12)):
+        req = LowPriorityRequest(
+            source_device=rng.randrange(N_DEV),
+            deadline=now + rng.uniform(10.0, 90.0),
+            frame_id=0, n_tasks=rng.randint(1, 4))
+        req.make_tasks()
+        reqs.append(req)
+    results = sched.allocate_low_priority_batch(reqs, now)
+    assert len(results) == len(reqs)
+    for req, res in zip(reqs, results):
+        assert len(res.allocations) + len(res.failed) == req.n_tasks
+        for a in res.allocations:
+            assert a.t_end <= req.deadline + 1e-9        # I2
+            assert a.cores in net.lp_core_options
+    _check_invariants(state, net)

@@ -102,3 +102,26 @@ def test_resume_mode_keeps_partial_decode(setup):
     assert victim.state == "done"
     # decode state registry is cleaned up on completion either way
     assert victim.rid not in eng._decode_state
+
+
+def test_submit_batch_admits_lp_burst(setup):
+    """submit_batch routes LP requests through the scheduler's batch API
+    (DESIGN.md §4.3) and HP requests through per-request admission; every
+    request must settle with correct result/request pairing."""
+    cfg, params, cost = setup
+    eng, net = _engine(cfg, params, cost, lp_tokens=3)
+    lps = [ServeRequest(prompt=_prompt(cfg, i + 20), max_new_tokens=3,
+                        priority=Priority.LOW, deadline=300.0,
+                        home_slice=i % 2)
+           for i in range(4)]
+    hp = ServeRequest(prompt=_prompt(cfg, 30), max_new_tokens=1,
+                      priority=Priority.HIGH, deadline=net.t_hp * 3 + 1.0,
+                      home_slice=0)
+    eng.submit_batch(lps + [hp])
+    m = eng.run()
+    assert hp.state == "done"
+    assert [r.state for r in lps] == ["done"] * 4
+    # positional pairing: each request generated ITS token budget
+    assert all(len(r.tokens_out) == 3 for r in lps)
+    assert m.lp_requests_total == 4 and m.lp_allocated == 4
+    assert m.lp_completed == 4 and m.hp_completed == 1
