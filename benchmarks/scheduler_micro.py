@@ -21,6 +21,10 @@ measures — rather than asserts — what the skyline-calendar rewrite
 * ``bench_large_n``             — the sim/scenarios.py suite end-to-end:
                                   device ladder 4 -> 256, the three arrival
                                   families, and an HP:LP mix sweep.
+* ``bench_policy_sweep``        — every policy in the registry
+                                  (core/policy.py) runs one reduced scenario;
+                                  a registry entry that cannot complete it
+                                  fails the benchmark (and the CI smoke).
 
 Run directly::
 
@@ -37,8 +41,10 @@ import time
 from repro.core.calendar import NetworkState
 from repro.core.calendar_reference import ReferenceNetworkState
 from repro.core.network import NetworkConfig
+from repro.core.policy import registered_policies
 from repro.core.scheduler import PreemptionAwareScheduler
 from repro.core.task import LowPriorityRequest, Priority, Task, reset_id_counters
+from repro.sim.experiment import ScenarioConfig, run_scenario
 from repro.sim.scenarios import LargeNConfig, run_large_n, sweep_devices, sweep_mix
 
 Row = tuple[str, str, str, float]
@@ -224,6 +230,36 @@ def bench_batch_admission(n_devices: int = 64, n_requests: int = 200) -> list[Ro
 
 
 # --------------------------------------------------------------------- #
+# Policy-registry sweep: every registered discipline must complete a    #
+# small scenario (CI smoke gate for the unified SchedulingPolicy API)   #
+# --------------------------------------------------------------------- #
+def bench_policy_sweep(n_frames: int = 60) -> list[Row]:
+    """Run one reduced scenario through EVERY entry in the policy registry,
+    failing hard (non-zero exit) if any policy cannot complete it."""
+    rows: list[Row] = []
+    for name in registered_policies():
+        cfg = ScenarioConfig(f"sweep_{name}", "uniform", name, True,
+                             n_frames=n_frames, seed=3)
+        t0 = time.perf_counter()
+        m = run_scenario(cfg)
+        wall = time.perf_counter() - t0
+        if m.frames_total != n_frames * cfg.n_devices or m.hp_generated == 0:
+            raise RuntimeError(
+                f"policy {name!r} did not complete the sweep scenario "
+                f"(frames={m.frames_total}, hp_generated={m.hp_generated})"
+            )
+        s = m.summary()
+        rows.append(("policy_sweep", name, "frame_completion_pct",
+                     s["frame_completion_pct"]))
+        rows.append(("policy_sweep", name, "hp_completion_pct",
+                     s["hp_completion_pct"]))
+        rows.append(("policy_sweep", name, "lp_completion_pct",
+                     s["lp_completion_pct"]))
+        rows.append(("policy_sweep", name, "wall_s", wall))
+    return rows
+
+
+# --------------------------------------------------------------------- #
 # Large-N scenario suite end-to-end                                     #
 # --------------------------------------------------------------------- #
 def bench_large_n(quick: bool = False) -> list[Row]:
@@ -260,8 +296,10 @@ def bench_all(quick: bool = False) -> list[Row]:
     import gc
 
     rows: list[Row] = []
-    rows += bench_scheduler_scaling()
+    rows += bench_policy_sweep()   # hard-fails if any registry entry breaks
     gc.collect()                   # isolate benches from each other's garbage
+    rows += bench_scheduler_scaling()
+    gc.collect()
     if quick:
         rows += bench_calendar_speedup(n_devices=16, n_tasks=1000, probes=15)
     else:

@@ -4,16 +4,28 @@
 from .calendar import DeviceCalendar, LinkCalendar, NetworkState, Reservation
 from .metrics import Metrics
 from .network import MessageSizes, NetworkConfig
+from .policy import (
+    Decision,
+    DecisionStatus,
+    PolicyDispatcher,
+    SchedulingPolicy,
+    create_policy,
+    register_policy,
+    registered_policies,
+)
 from .scheduler import (
     Allocation,
     HPResult,
     LPResult,
     PreemptionAwareScheduler,
+    VICTIM_POLICIES,
 )
 from .task import Frame, LowPriorityRequest, Priority, Task, TaskState
 
 __all__ = [
     "Allocation",
+    "Decision",
+    "DecisionStatus",
     "DeviceCalendar",
     "Frame",
     "HPResult",
@@ -24,9 +36,15 @@ __all__ = [
     "Metrics",
     "NetworkConfig",
     "NetworkState",
+    "PolicyDispatcher",
     "PreemptionAwareScheduler",
     "Priority",
     "Reservation",
+    "SchedulingPolicy",
     "Task",
     "TaskState",
+    "VICTIM_POLICIES",
+    "create_policy",
+    "register_policy",
+    "registered_policies",
 ]

@@ -47,6 +47,10 @@ from .metrics import Metrics
 from .network import NetworkConfig
 from .task import LowPriorityRequest, Priority, Task, TaskState
 
+#: Victim-selection rules accepted by the preemption mechanism (also the
+#: options surfaced by ``ScenarioConfig`` validation).
+VICTIM_POLICIES = ("farthest_deadline", "weakest_set")
+
 
 @dataclass
 class Allocation:
@@ -75,6 +79,40 @@ class LPResult:
     failed: list[Task] = field(default_factory=list)
 
 
+class LinkSlotRegistry:
+    """Link reservations per task, so a discipline can cancel a preempted or
+    reallocated task's still-pending messages (alloc/xfer/update).  Shared by
+    ``PreemptionAwareScheduler`` and the calendar-backed policy plugins."""
+
+    def __init__(self) -> None:
+        self._slots: dict[int, list[Reservation]] = {}
+        self._prune_at = 256
+
+    def record(self, task_id: int, slots: list[Reservation]) -> None:
+        self._slots[task_id] = slots
+
+    def pop(self, task_id: int) -> list[Reservation]:
+        return self._slots.pop(task_id, [])
+
+    def cancel_pending(self, link, task_id: int, now: float) -> None:
+        """Cancel the task's link slots that still lie in the future."""
+        for slot in self.pop(task_id):
+            if slot.t2 > now + EPS:
+                link.cancel(slot)
+
+    def prune(self, now: float) -> None:
+        """Drop records whose messages all lie in the past.  Amortised
+        O(1): runs only when the registry doubled."""
+        if len(self._slots) <= self._prune_at:
+            return
+        self._slots = {
+            tid: slots
+            for tid, slots in self._slots.items()
+            if any(s.t2 > now for s in slots)
+        }
+        self._prune_at = max(256, 2 * len(self._slots))
+
+
 class PreemptionAwareScheduler:
     """Controller-side scheduler over the time-slotted network state."""
 
@@ -86,10 +124,12 @@ class PreemptionAwareScheduler:
         metrics: Optional[Metrics] = None,
         on_preempt: Optional[Callable[[Task], None]] = None,
         victim_policy: str = "farthest_deadline",
+        allow_offload: bool = True,
     ) -> None:
         self.state = state
         self.net = net
         self.preemption = preemption
+        self.allow_offload = allow_offload
         self.metrics = metrics if metrics is not None else Metrics()
         # Callback into the runtime so a running victim is actually stopped.
         self.on_preempt = on_preempt
@@ -101,14 +141,16 @@ class PreemptionAwareScheduler:
         #                        fewest healthy siblings — so preemption
         #                        destroys the least prospective frame value;
         #                        tie-break by farthest deadline.
-        if victim_policy not in ("farthest_deadline", "weakest_set"):
-            raise ValueError(victim_policy)
+        if victim_policy not in VICTIM_POLICIES:
+            raise ValueError(
+                f"unknown victim_policy {victim_policy!r}; expected one of "
+                + ", ".join(VICTIM_POLICIES)
+            )
         self.victim_policy = victim_policy
         self._requests: dict[int, LowPriorityRequest] = {}
-        # task_id -> link reservations committed for that task, so preemption
-        # can cancel the victim's pending xfer/update messages.
-        self._link_slots: dict[int, list[Reservation]] = {}
-        self._link_prune_at = 256
+        # link reservations per task, so preemption/reallocation can cancel
+        # a task's still-pending xfer/update messages.
+        self.links = LinkSlotRegistry()
 
     # ------------------------------------------------------------------ #
     # High-priority algorithm                                            #
@@ -116,7 +158,7 @@ class PreemptionAwareScheduler:
     def allocate_high_priority(self, task: Task, now: float) -> HPResult:
         t_wall = _time.perf_counter()
         self.state.gc(now)
-        self._prune_link_slots(now)
+        self.links.prune(now)
         result = self._hp_inner(task, now)
         elapsed = _time.perf_counter() - t_wall
         if result.preempted:
@@ -170,9 +212,7 @@ class PreemptionAwareScheduler:
             # Cancel the victim's still-pending link slots (xfer/update):
             # leaving them reserved would permanently inflate link congestion
             # with traffic for a task that will never run in that slot.
-            for slot in self._link_slots.pop(victim.task_id, ()):
-                if slot.t2 > now + EPS:
-                    link.cancel(slot)
+            self.links.cancel_pending(link, victim.task_id, now)
             victim.state = TaskState.PREEMPTED
             victim.preempt_count += 1
             self.metrics.preemptions += 1
@@ -240,7 +280,7 @@ class PreemptionAwareScheduler:
         task.state = TaskState.ALLOCATED
         task.device, task.cores = task.source_device, 1
         task.t_start, task.t_end, task.offloaded = t1, t2, False
-        self._link_slots[task.task_id] = slots
+        self.links.record(task.task_id, slots)
         return Allocation(task, task.source_device, t1, t2, 1, False, slots)
 
     # ------------------------------------------------------------------ #
@@ -257,7 +297,7 @@ class PreemptionAwareScheduler:
         fail and therefore cannot change the outcome."""
         t_wall = _time.perf_counter()
         self.state.gc(now)
-        self._prune_link_slots(now)
+        self.links.prune(now)
         self._requests[request.request_id] = request     # set-health registry
         deadline = request.deadline
         unallocated = [t for t in request.tasks if t.state == TaskState.PENDING]
@@ -405,7 +445,7 @@ class PreemptionAwareScheduler:
         """
         t_wall = _time.perf_counter()
         self.state.gc(now)
-        self._prune_link_slots(now)
+        self.links.prune(now)
         results = [LPResult() for _ in requests]
         order = itertools.count()
         pending: list[tuple[float, int, int, Task]] = []
@@ -503,21 +543,19 @@ class PreemptionAwareScheduler:
         self.metrics.t_lp_alloc.extend([share] * len(requests))
         return results
 
-    def _prune_link_slots(self, now: float) -> None:
-        """Drop link-slot records of tasks whose messages all lie in the
-        past.  Amortised O(1): runs only when the registry doubled."""
-        if len(self._link_slots) <= self._link_prune_at:
-            return
-        self._link_slots = {
-            tid: slots
-            for tid, slots in self._link_slots.items()
-            if any(s.t2 > now for s in slots)
-        }
-        self._link_prune_at = max(256, 2 * len(self._link_slots))
-
     def reallocate(self, task: Task, now: float) -> Optional[Allocation]:
-        """Public reallocation entry (used by runtimes on external preemption)."""
+        """Public reallocation entry (used by runtimes on external preemption).
+
+        The task's previous allocation is torn down first — its device
+        reservation is released and its still-pending link slots
+        (xfer/update) are cancelled — whether or not the reallocation
+        succeeds: the old slots describe work and traffic that will never
+        happen (same hygiene the preemption loop applies to its victims).
+        """
         r_wall = _time.perf_counter()
+        if task.device is not None:
+            self.state.devices[task.device].release(task)
+        self.links.cancel_pending(self.state.link, task.task_id, now)
         alloc = self._allocate_lp_task(task, now, task.deadline)
         self.metrics.t_realloc.append(_time.perf_counter() - r_wall)
         if alloc is not None:
@@ -564,6 +602,8 @@ class PreemptionAwareScheduler:
         sdev = self.state.devices[source]
         if sdev.fits(arrival, arrival + proc, cores):
             dev, offloaded, xfer_t1, xfer_dur, t1 = sdev, False, 0.0, 0.0, arrival
+        elif not self.allow_offload:
+            return None
         else:
             xfer_t1, xfer_dur = ctx["xfer_t1"], ctx["xfer_dur"]
             t1 = ctx["t1_off"]
@@ -596,7 +636,7 @@ class PreemptionAwareScheduler:
         task.state = TaskState.ALLOCATED
         task.device, task.cores = dev.device, cores
         task.t_start, task.t_end, task.offloaded = t1, t2, offloaded
-        self._link_slots[task.task_id] = slots
+        self.links.record(task.task_id, slots)
         return Allocation(task, dev.device, t1, t2, cores, offloaded, slots)
 
     def _try_upgrade(self, alloc: Allocation) -> bool:

@@ -18,22 +18,27 @@ The engine runs in *virtual time* driven by the same time-slotted calendars
 as the reproduction (we have one CPU, not a pod), while the actual token
 generation is REAL jax compute — scheduling decisions and deadline outcomes
 come from the calendar; logits come from the model.
+
+Scheduling is pluggable (DESIGN.md §9): the ``policy`` argument resolves
+through the policy registry, so the engine drives any *slot-based*
+registered discipline ("scheduler", "edf_only", "no_offload", ...) through
+the same ``PolicyDispatcher`` admission/execution loop as the sim.
+Execution-driving policies (the workstealers' processor sharing) have no
+reserved slots to pin real compute to and are rejected with a clear error.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..core.calendar import NetworkState
 from ..core.metrics import Metrics
 from ..core.network import NetworkConfig
-from ..core.scheduler import PreemptionAwareScheduler
+from ..core.policy import DispatchClient, PolicyDispatcher, create_policy
 from ..core.task import LowPriorityRequest, Priority, Task, TaskState
-from ..models import model as M
 from ..models.config import ModelConfig
 from ..sim.events import EventQueue
 from ..training.steps import make_prefill_step, make_serve_step
@@ -81,6 +86,42 @@ class ServeRequest:                       # a jax array (dataclass __eq__
     task: Optional[Task] = None
 
 
+class _ServingClient(DispatchClient):
+    """Dispatcher hooks for the engine (real compute, request bookkeeping)."""
+
+    def __init__(self, eng: "PreemptiveServingEngine") -> None:
+        self.eng = eng
+
+    def on_start(self, task: Task) -> None:
+        self.eng._run_compute(task)
+
+    def on_hp_complete(self, task: Task) -> None:
+        self.eng._finish_request(task)
+
+    def on_lp_complete(self, task: Task) -> None:
+        self.eng.metrics.lp_requests_completed += 1
+        self.eng._finish_request(task)
+
+    def on_preempt(self, task: Task) -> None:
+        eng = self.eng
+        req = eng._by_task.get(task)
+        if req is None:
+            return
+        req.n_preemptions += 1
+        req.state = "preempted"
+        if eng.lose_work:
+            eng._decode_state.pop(req.rid, None)
+            req.tokens_out = []
+
+    def on_admit_fail(self, task: Task) -> None:
+        eng = self.eng
+        req = eng._by_task.get(task)
+        if req is None:
+            return
+        req.state = "failed"
+        eng.done.append(req)
+
+
 class PreemptiveServingEngine:
     """Priority/deadline/preemption-aware engine over N slices."""
 
@@ -97,6 +138,7 @@ class PreemptiveServingEngine:
         cache_len: int = 256,
         net: Optional[NetworkConfig] = None,
         victim_policy: str = "farthest_deadline",
+        policy: str = "scheduler",
     ) -> None:
         self.cfg = cfg
         self.params = params
@@ -105,12 +147,28 @@ class PreemptiveServingEngine:
         self.lose_work = lose_work
         self.q = EventQueue()
         self.metrics = Metrics("serving")
-        self.state = NetworkState(n_slices, capacity=units_per_slice)
         self.net = net or NetworkConfig()
-        self.sched = PreemptionAwareScheduler(
-            self.state, self.net, preemption=preemption,
-            metrics=self.metrics, on_preempt=self._on_preempt,
-            victim_policy=victim_policy)
+        self.policy = create_policy(
+            policy,
+            n_devices=n_slices,
+            net=self.net,
+            capacity=units_per_slice,
+            preemption=preemption,
+            victim_policy=victim_policy,
+            metrics=self.metrics,
+        )
+        if self.policy.drives_execution:
+            raise ValueError(
+                f"policy {policy!r} drives its own execution model; the "
+                "serving engine requires a slot-based policy (reserved "
+                "[t_start, t_end) windows to pin real compute to)"
+            )
+        # slice calendars (tests and cost probes read occupancy off this)
+        self.state = getattr(self.policy, "state", None)
+        self.dispatcher = PolicyDispatcher(
+            self.policy, self.q, self.net, self.metrics,
+            client=_ServingClient(self), exact_slots=True,
+        )
         self._prefill = jax.jit(make_prefill_step(cfg, cache_len))
         self._serve = jax.jit(make_serve_step(cfg))
         self._by_task: dict[Task, ServeRequest] = {}
@@ -127,10 +185,10 @@ class PreemptiveServingEngine:
     def submit_batch(self, reqs: list[ServeRequest]) -> None:
         """Admit a burst of requests at the same virtual instant.
 
-        LP requests go through the scheduler's batch API (one gc + one
-        time-point sweep across the whole burst — DESIGN.md §4.3); HP
-        requests keep per-request admission, since each may preempt and must
-        observe the link state its predecessors left behind.
+        LP requests go through the policy's batch decision (one sweep across
+        the whole burst — DESIGN.md §4.3); HP requests keep per-request
+        admission, since each may preempt and must observe the link state its
+        predecessors left behind.
         """
         lp = [r for r in reqs if r.priority == Priority.LOW]
         for r in reqs:
@@ -154,27 +212,10 @@ class PreemptiveServingEngine:
         req.task = task
         return lp
 
-    def _settle_lp(self, req: ServeRequest, res) -> None:
-        """Record one LP admission outcome and arm execution on success."""
-        if res.failed:
-            req.state = "failed"
-            self.metrics.lp_failed_alloc += 1
-            self.done.append(req)
-            return
-        self.metrics.lp_allocated += 1
-        alloc = res.allocations[0]
-        if alloc.offloaded:
-            self.metrics.lp_offloaded += 1
-        bucket = (self.metrics.core_alloc_offloaded if alloc.offloaded
-                  else self.metrics.core_alloc_local)
-        bucket[alloc.cores] += 1
-        self._arm(alloc.task)
-
     def _admit_lp_batch(self, reqs: list[ServeRequest]) -> None:
         now = self.q.now
         lps = [self._make_lp(req, now) for req in reqs]
-        for req, res in zip(reqs, self.sched.allocate_low_priority_batch(lps, now)):
-            self._settle_lp(req, res)
+        self.dispatcher.submit_lp_batch(lps)
 
     def _admit(self, req: ServeRequest) -> None:
         now = self.q.now
@@ -184,35 +225,20 @@ class PreemptiveServingEngine:
             req.task = task
             self._by_task[task] = req
             self.metrics.hp_generated += 1
-            res = self.sched.allocate_high_priority(task, now)
-            if not res.success:
-                req.state = "failed"
-                self.metrics.hp_failed_alloc += 1
-                self.done.append(req)
-                return
-            self._arm(task)
-            for re_alloc in res.reallocations:
-                self._arm(re_alloc.task)
+            self.dispatcher.submit_hp(task)
         else:
-            lp = self._make_lp(req, now)
-            self._settle_lp(req, self.sched.allocate_low_priority(lp, now))
+            self.dispatcher.submit_lp(self._make_lp(req, now))
 
     # ------------------------------------------------------------------ #
     # Execution (real compute at virtual-time slot boundaries)            #
     # ------------------------------------------------------------------ #
-    def _arm(self, task: Task) -> None:
-        self.q.push(task.t_start, lambda: self._execute(task))
-
-    def _execute(self, task: Task) -> None:
-        if task.state != TaskState.ALLOCATED:
-            return                          # preempted before start
+    def _run_compute(self, task: Task) -> None:
+        """The reserved slot began: run the request's actual jax compute."""
         req = self._by_task[task]
-        task.state = TaskState.RUNNING
         req.state = "running"
         if req.priority == Priority.HIGH:
             nxt, _ = self._prefill(self.params, {"tokens": req.prompt})
             req.tokens_out = [int(nxt[0])]
-            self.q.push(task.t_end, lambda: self._complete(task))
         else:
             # run prefill now (or resume), decode tokens as the slot elapses
             if req.rid in self._decode_state and not self.lose_work:
@@ -231,36 +257,12 @@ class PreemptiveServingEngine:
                 req.tokens_out.append(int(last[0, 0]))
                 pos += 1
             self._decode_state[req.rid] = (caches, last, pos)
-            self.q.push(task.t_end, lambda: self._complete(task))
 
-    def _on_preempt(self, victim: Task) -> None:
-        req = self._by_task.get(victim)
-        if req is None:
-            return
-        req.n_preemptions += 1
-        req.state = "preempted"
-        if self.lose_work:
-            self._decode_state.pop(req.rid, None)
-            req.tokens_out = []
-
-    def _complete(self, task: Task) -> None:
-        if task.state != TaskState.RUNNING:
-            return                          # was preempted mid-slot
+    def _finish_request(self, task: Task) -> None:
         req = self._by_task[task]
-        now = self.q.now
-        task.state = TaskState.COMPLETED
         req.state = "done"
-        req.completed_at = now
+        req.completed_at = self.q.now
         self._decode_state.pop(req.rid, None)
-        if req.priority == Priority.HIGH:
-            self.metrics.hp_completed += 1
-            if req.n_preemptions == 0 and task.preempt_count == 0:
-                pass
-        else:
-            self.metrics.lp_completed += 1
-            if task.offloaded:
-                self.metrics.lp_offloaded_completed += 1
-            self.metrics.lp_requests_completed += 1
         self.done.append(req)
 
     # ------------------------------------------------------------------ #

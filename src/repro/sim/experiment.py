@@ -1,23 +1,23 @@
 """Discrete-event reproduction of the paper's RPi2B testbed experiments (§5/§6).
 
-Three backends share one frame-generation runtime:
-  * ``scheduler``     — the paper's preemption-aware time-slotted scheduler
-  * ``central_ws``    — centralised workstealer baseline (global job queue)
-  * ``decentral_ws``  — decentralised workstealer baseline (per-device queues,
-                        random polling)
-each with and without the preemption mechanism.
+One frame-generation runtime drives ANY scheduling discipline registered in
+the policy registry (``core/policy.py``) — the paper's preemption-aware
+scheduler, both workstealer baselines, and the beyond-paper ``edf_only`` /
+``no_offload`` baselines — each with and without the preemption mechanism.
+``ScenarioConfig.algorithm`` resolves through the registry, so adding a new
+discipline requires no edits to this module.
 """
 from __future__ import annotations
 
 import random
-from collections import deque
 from dataclasses import dataclass
 from typing import Optional
 
-from ..core.calendar import NetworkState
 from ..core.metrics import Metrics
 from ..core.network import NetworkConfig
-from ..core.scheduler import Allocation, PreemptionAwareScheduler
+from ..core.policy import DispatchClient, PolicyDispatcher, create_policy, \
+    registered_policies
+from ..core.scheduler import VICTIM_POLICIES
 from ..core.task import (
     Frame,
     LowPriorityRequest,
@@ -26,15 +26,16 @@ from ..core.task import (
     TaskState,
     reset_id_counters,
 )
-from .events import Event, EventQueue
-from .traces import TraceConfig, generate_trace
+from .events import EventQueue
+from .traces import TRACE_FAMILIES, TraceConfig, generate_trace, \
+    validate_trace_name
 
 
 @dataclass(frozen=True)
 class ScenarioConfig:
     name: str
-    trace: str                       # "uniform" | "weighted_1".."weighted_4"
-    algorithm: str                   # "scheduler" | "central_ws" | "decentral_ws"
+    trace: str                       # "uniform" | "weighted_1".."weighted_4" | "ratio_P"
+    algorithm: str                   # any name in core.policy.registered_policies()
     preemption: bool
     n_frames: int = 1296
     n_devices: int = 4
@@ -47,8 +48,21 @@ class ScenarioConfig:
     victim_policy: str = "farthest_deadline"
     # Controller-side LP batching (beyond-paper, DESIGN.md §4.3): LP requests
     # arriving within this window are admitted through ONE batch sweep
-    # (`allocate_low_priority_batch`).  0 = the paper's per-request path.
+    # (`decide_lp_batch`).  0 = the paper's per-request path.
     lp_batch_window: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.algorithm not in registered_policies():
+            raise ValueError(
+                f"unknown algorithm {self.algorithm!r}; registered policies: "
+                + ", ".join(registered_policies())
+            )
+        validate_trace_name(self.trace)
+        if self.victim_policy not in VICTIM_POLICIES:
+            raise ValueError(
+                f"unknown victim_policy {self.victim_policy!r}; expected one "
+                "of: " + ", ".join(VICTIM_POLICIES)
+            )
 
 
 # The paper's evaluated scenarios (Table 1 legend).
@@ -74,8 +88,23 @@ SCENARIOS: dict[str, ScenarioConfig] = {
 }
 
 
+class _SimClient(DispatchClient):
+    """Dispatcher hooks for the discrete-event sim (noise model, frames)."""
+
+    def __init__(self, rt: "Runtime") -> None:
+        self.rt = rt
+
+    def exec_time(self, task: Task, busy_frac: float) -> float:
+        return self.rt.exec_time(task, busy_frac)
+
+    def on_hp_complete(self, task: Task) -> None:
+        frame = self.rt.frames_by_hp[task]
+        if frame.trace_value >= 1:
+            self.rt.issue_lp_request(frame)
+
+
 class Runtime:
-    """Frame generation + metric finalisation shared by all backends."""
+    """Frame generation + metric finalisation shared by all policies."""
 
     def __init__(self, cfg: ScenarioConfig, net: Optional[NetworkConfig] = None):
         self.cfg = cfg
@@ -85,19 +114,24 @@ class Runtime:
         self.rng = random.Random(cfg.seed * 7919 + 17)
         self.frames: list[Frame] = []
         self.requests: list[LowPriorityRequest] = []
-        # The controller processes requests in a blocking sequential fashion
-        # (paper §3.3); allocation latency delays decisions in sim-time.
-        self.ctrl_busy_until = 0.0
-        self.backend = _make_backend(self)
-
-    def controller_job(self, latency: float, fn) -> None:
-        """Run `fn` once the sequential controller reaches this job."""
-        start = max(self.q.now, self.ctrl_busy_until)
-        self.ctrl_busy_until = start + latency
-        self.q.push(self.ctrl_busy_until, fn)
-
-    def charge_controller(self, latency: float) -> None:
-        self.ctrl_busy_until = max(self.q.now, self.ctrl_busy_until) + latency
+        self.frames_by_hp: dict[Task, Frame] = {}
+        self.policy = create_policy(
+            cfg.algorithm,
+            n_devices=cfg.n_devices,
+            net=self.net,
+            preemption=cfg.preemption,
+            victim_policy=cfg.victim_policy,
+            metrics=self.metrics,
+        )
+        self.dispatcher = PolicyDispatcher(
+            self.policy, self.q, self.net, self.metrics,
+            client=_SimClient(self),
+            lp_batch_window=cfg.lp_batch_window,
+            rng=self.rng,
+            exec_noise=cfg.exec_noise,
+            hp_noise_sigma=cfg.hp_noise_sigma,
+            lp_noise_sigma=cfg.lp_noise_sigma,
+        )
 
     # -- execution-time noise + contention model -------------------------- #
     def exec_time(self, task: Task, busy_frac: float = 0.0) -> float:
@@ -145,12 +179,25 @@ class Runtime:
             self.metrics.hp_generated += 1
             # stage 1 object detection = constant overhead before the HP request
             self.q.push(self.q.now + self.net.t_object_detect,
-                        lambda: self.backend.hp_request(frame))
+                        lambda: self._hp_request(frame))
 
         self.q.push(t, gen)
 
+    def _hp_request(self, frame: Frame) -> None:
+        now = self.q.now
+        task = Task(
+            priority=Priority.HIGH,
+            source_device=frame.device,
+            deadline=self.net.hp_deadline(now),
+            frame_id=frame.frame_id,
+            created_at=now,
+        )
+        frame.hp_task = task
+        self.frames_by_hp[task] = frame
+        self.dispatcher.submit_hp(task)
+
     def issue_lp_request(self, frame: Frame) -> None:
-        """Called by backends when a frame's HP task completes with value>=1."""
+        """Called when a frame's HP task completes with value>=1."""
         req = LowPriorityRequest(
             source_device=frame.device,
             deadline=frame.deadline,
@@ -165,11 +212,11 @@ class Runtime:
         self.metrics.lp_requests_total += 1
         # request message transit to the controller
         self.q.push(self.q.now + self.net.slot(self.net.msg.lp_alloc),
-                    lambda: self.backend.lp_request(req))
+                    lambda: self.dispatcher.submit_lp(req))
 
     def _finalize(self) -> Metrics:
         m = self.metrics
-        self.backend.finalize()
+        self.dispatcher.finalize()
         for frame in self.frames:
             if frame.completed:
                 m.frames_completed += 1
@@ -179,482 +226,6 @@ class Runtime:
             if done == req.n_tasks:
                 m.lp_requests_completed += 1
         return m
-
-
-def _make_backend(rt: Runtime):
-    if rt.cfg.algorithm == "scheduler":
-        return SchedulerBackend(rt)
-    if rt.cfg.algorithm == "central_ws":
-        return WorkstealerBackend(rt, central=True)
-    if rt.cfg.algorithm == "decentral_ws":
-        return WorkstealerBackend(rt, central=False)
-    raise ValueError(f"unknown algorithm {rt.cfg.algorithm}")
-
-
-# ====================================================================== #
-# Scheduler backend (the paper's system)                                 #
-# ====================================================================== #
-class SchedulerBackend:
-    def __init__(self, rt: Runtime) -> None:
-        self.rt = rt
-        self.state = NetworkState(rt.cfg.n_devices)
-        self.sched = PreemptionAwareScheduler(
-            self.state,
-            rt.net,
-            preemption=rt.cfg.preemption,
-            metrics=rt.metrics,
-            on_preempt=self._on_preempt,
-            victim_policy=rt.cfg.victim_policy,
-        )
-        self._exec_events: dict[Task, Event] = {}
-        self._frames_by_hp: dict[Task, Frame] = {}
-        self._via_preemption: set[Task] = set()
-        self._lp_buffer: list[LowPriorityRequest] = []
-        self._lp_flush_armed = False
-
-    # -- requests --------------------------------------------------------- #
-    def hp_request(self, frame: Frame) -> None:
-        now = self.rt.q.now
-        task = Task(
-            priority=Priority.HIGH,
-            source_device=frame.device,
-            deadline=self.rt.net.hp_deadline(now),
-            frame_id=frame.frame_id,
-            created_at=now,
-        )
-        frame.hp_task = task
-        self._frames_by_hp[task] = frame
-        res = self.sched.allocate_high_priority(task, now)
-        if not res.success:
-            task.state = TaskState.FAILED
-            self.rt.metrics.hp_failed_alloc += 1
-            return
-        if res.preempted:
-            self._via_preemption.add(task)
-        self._schedule_exec(res.allocation)
-        for re in res.reallocations:
-            self._schedule_exec(re)
-
-    def lp_request(self, req: LowPriorityRequest) -> None:
-        window = self.rt.cfg.lp_batch_window
-        if window <= 0.0:
-            self._account_lp(self.sched.allocate_low_priority(req, self.rt.q.now))
-            return
-        # batching mode: buffer, admit every request of the window together
-        self._lp_buffer.append(req)
-        if not self._lp_flush_armed:
-            self._lp_flush_armed = True
-            self.rt.q.push(self.rt.q.now + window, self._flush_lp_batch)
-
-    def _flush_lp_batch(self) -> None:
-        self._lp_flush_armed = False
-        batch, self._lp_buffer = self._lp_buffer, []
-        if not batch:
-            return
-        for res in self.sched.allocate_low_priority_batch(batch, self.rt.q.now):
-            self._account_lp(res)
-
-    def _account_lp(self, res) -> None:
-        m = self.rt.metrics
-        m.lp_failed_alloc += len(res.failed)
-        for alloc in res.allocations:
-            m.lp_allocated += 1
-            bucket = m.core_alloc_offloaded if alloc.offloaded else m.core_alloc_local
-            bucket[alloc.cores] += 1
-            if alloc.offloaded:
-                m.lp_offloaded += 1
-            self._schedule_exec(alloc)
-
-    # -- execution -------------------------------------------------------- #
-    def _schedule_exec(self, alloc: Allocation) -> None:
-        task = alloc.task
-
-        def start() -> None:
-            if task.state != TaskState.ALLOCATED:
-                return                      # preempted before execution began
-            task.state = TaskState.RUNNING
-            dev = self.state.devices[alloc.device]
-            busy = max(0, dev.max_usage(alloc.t_start, alloc.t_end) - alloc.cores)
-            actual = self.rt.exec_time(task, busy / dev.capacity)
-            finish = alloc.t_start + actual
-            if finish > alloc.t_end:
-                ev = self.rt.q.push(alloc.t_end, lambda: self._violate(task))
-            else:
-                ev = self.rt.q.push(finish, lambda: self._complete(task))
-            self._exec_events[task] = ev
-
-        self._exec_events[task] = self.rt.q.push(alloc.t_start, start)
-
-    def _on_preempt(self, victim: Task) -> None:
-        ev = self._exec_events.pop(victim, None)
-        if ev is not None:
-            ev.cancel()
-
-    def _complete(self, task: Task) -> None:
-        now = self.rt.q.now
-        self._exec_events.pop(task, None)
-        m = self.rt.metrics
-        late = now > task.deadline + 1e-9
-        dev = self.state.devices[task.device]
-        dev.truncate(task, now)        # state update frees remaining slot time
-        if task.priority == Priority.HIGH:
-            if late:
-                task.state = TaskState.FAILED
-                m.hp_failed_runtime += 1
-                return
-            task.state = TaskState.COMPLETED
-            m.hp_completed += 1
-            if task in self._via_preemption:
-                m.hp_completed_via_preemption += 1
-            frame = self._frames_by_hp[task]
-            if frame.trace_value >= 1:
-                self.rt.issue_lp_request(frame)
-        else:
-            if late:
-                task.state = TaskState.FAILED
-                return
-            task.state = TaskState.COMPLETED
-            m.lp_completed += 1
-            if task.offloaded:
-                m.lp_offloaded_completed += 1
-
-    def _violate(self, task: Task) -> None:
-        """Task overran its reserved slot; the device terminates it (§7.3)."""
-        self._exec_events.pop(task, None)
-        task.state = TaskState.VIOLATED
-        self.state.devices[task.device].release(task)
-        if task.priority == Priority.HIGH:
-            self.rt.metrics.hp_failed_runtime += 1
-
-    def finalize(self) -> None:
-        pass
-
-
-# ====================================================================== #
-# Workstealer baselines (processor-sharing execution model)              #
-#                                                                        #
-# Workstealers perform no admission control: devices rashly execute     #
-# whatever they steal (paper §8 "rash task placement decisions").  Cores #
-# are therefore *oversubscribed*, which the paper reports as middleware  #
-# + concurrent-DNN degradation (11.611 s benchmarked tasks averaging     #
-# ~14.5 s).  We model execution as processor sharing: each running task  #
-# progresses at rate cores * min(1, capacity/demand); HP tasks addition- #
-# ally pay a GIL/middleware interference penalty when the device is      #
-# oversubscribed (the Python inference manager competes with TFLite      #
-# worker threads).                                                       #
-# ====================================================================== #
-class _Run:
-    __slots__ = ("work", "cores")
-
-    def __init__(self, work: float, cores: int) -> None:
-        self.work = work        # remaining core-seconds
-        self.cores = cores
-
-
-class _WSDevice:
-    __slots__ = ("idx", "capacity", "running", "queue", "last", "event",
-                 "inflight")
-
-    def __init__(self, idx: int, capacity: int = 4) -> None:
-        self.idx = idx
-        self.capacity = capacity
-        self.running: dict[Task, _Run] = {}
-        self.queue: deque[Task] = deque()
-        self.last = 0.0          # last time `work` values were advanced
-        self.event: Optional[Event] = None
-        self.inflight = 0        # cores reserved by steals still in transfer
-
-    @property
-    def demand(self) -> int:
-        return sum(r.cores for r in self.running.values())
-
-    @property
-    def lp_cores(self) -> int:
-        return sum(r.cores for t, r in self.running.items()
-                   if t.priority == Priority.LOW)
-
-    @property
-    def committed(self) -> int:
-        """Cores running or promised (blocks further steals)."""
-        return self.demand + self.inflight
-
-    def share(self) -> float:
-        d = self.demand
-        return 1.0 if d <= self.capacity else self.capacity / d
-
-
-class WorkstealerBackend:
-    """Centralised (global queue) or decentralised (per-device, random polls)."""
-
-    # HP interference coefficient: rate *= 1/(1 + GIL_COEF * over/capacity)
-    # when the device is oversubscribed (see class comment).
-    GIL_COEF = 0.6
-    # Zombie grace: a late task keeps burning cores for this fraction of a
-    # frame period past its deadline before the violation kill lands
-    # (detection + violation message + manager teardown are not instant).
-    # Calibrated against the paper's Fig 2a workstealer frame counts.
-    KILL_GRACE = 1.0
-
-    def __init__(self, rt: Runtime, central: bool) -> None:
-        self.rt = rt
-        self.central = central
-        self.devices = [_WSDevice(d) for d in range(rt.cfg.n_devices)]
-        self.global_queue: deque[Task] = deque()
-        self._frames_by_hp: dict[Task, Frame] = {}
-        self._via_preemption: set[Task] = set()
-        self._preempt_pending: set[Task] = set()
-        self._polling: set[int] = set()
-
-    # -- processor-sharing core ------------------------------------------- #
-    def _hp_penalty(self, dev: _WSDevice) -> float:
-        over = max(0, dev.demand - dev.capacity)
-        return 1.0 / (1.0 + self.GIL_COEF * over / dev.capacity)
-
-    def _rate(self, dev: _WSDevice, task: Task, run: _Run) -> float:
-        rate = run.cores * dev.share()
-        if task.priority == Priority.HIGH:
-            rate *= self._hp_penalty(dev)
-        return rate
-
-    def _advance(self, dev: _WSDevice) -> None:
-        """Drain elapsed progress into every running task's `work`."""
-        now = self.rt.q.now
-        dt = now - dev.last
-        if dt > 0:
-            for task, run in dev.running.items():
-                run.work -= dt * self._rate(dev, task, run)
-        dev.last = now
-
-    def _reschedule(self, dev: _WSDevice) -> None:
-        """(Re)arm the next-completion event after any demand change."""
-        if dev.event is not None:
-            dev.event.cancel()
-            dev.event = None
-        if not dev.running:
-            return
-        soonest = min(
-            run.work / max(self._rate(dev, task, run), 1e-12)
-            for task, run in dev.running.items()
-        )
-        dev.event = self.rt.q.push(
-            self.rt.q.now + max(soonest, 0.0), lambda: self._on_finish(dev)
-        )
-
-    def _on_finish(self, dev: _WSDevice) -> None:
-        dev.event = None
-        self._advance(dev)
-        done = [t for t, r in dev.running.items() if r.work <= 1e-6]
-        for task in done:
-            dev.running.pop(task)
-            self._complete(dev, task)
-        self._kick(dev)
-        self._kick_all()
-        self._reschedule(dev)
-
-    def _start(self, dev: _WSDevice, task: Task, cores: int) -> None:
-        rt = self.rt
-        self._advance(dev)
-        task.device, task.cores = dev.idx, cores
-        task.offloaded = task.offloaded or (
-            task.priority == Priority.LOW and dev.idx != task.source_device
-        )
-        task.state = TaskState.RUNNING
-        if task.priority == Priority.HIGH:
-            base = rt.net.t_hp
-            sigma = self.rt.cfg.hp_noise_sigma
-        else:
-            base = rt.net.lp_proc_time(cores)
-            sigma = self.rt.cfg.lp_noise_sigma
-        work = base * cores
-        if rt.cfg.exec_noise:
-            work = max(0.05, work + rt.rng.gauss(0.0, sigma * cores))
-        dev.running[task] = _Run(work, cores)
-        # The inference manager terminates tasks that overrun their deadline
-        # (paper §7.3 task-violation messages) — partial work is wasted.
-        if task.priority == Priority.LOW:
-            rt.q.push(task.deadline + self.KILL_GRACE * rt.net.frame_period,
-                      lambda: self._kill_if_late(dev, task))
-        self._reschedule(dev)
-
-    def _kill_if_late(self, dev: _WSDevice, task: Task) -> None:
-        if task not in dev.running:
-            return
-        self._advance(dev)
-        dev.running.pop(task)
-        task.state = TaskState.FAILED
-        if task in self._preempt_pending:
-            self._preempt_pending.discard(task)
-            self.rt.metrics.realloc_failure += 1
-        self._kick(dev)
-        self._kick_all()
-        self._reschedule(dev)
-
-    # -- requests --------------------------------------------------------- #
-    def hp_request(self, frame: Frame) -> None:
-        rt, now = self.rt, self.rt.q.now
-        dev = self.devices[frame.device]
-        task = Task(
-            priority=Priority.HIGH,
-            source_device=frame.device,
-            deadline=rt.net.hp_deadline(now),
-            frame_id=frame.frame_id,
-            created_at=now,
-        )
-        frame.hp_task = task
-        self._frames_by_hp[task] = frame
-        # Preemption: if starting the HP task would oversubscribe the device,
-        # evict the running LP task with the farthest deadline (work lost).
-        if rt.cfg.preemption and dev.demand + 1 > dev.capacity:
-            victims = [t for t in dev.running if t.priority == Priority.LOW]
-            if victims:
-                self._preempt(dev, max(victims, key=lambda t: t.deadline))
-                self._via_preemption.add(task)
-        self._start(dev, task, cores=1)
-
-    def lp_request(self, req: LowPriorityRequest) -> None:
-        for t in req.tasks:
-            if self.central:
-                self.global_queue.append(t)
-            else:
-                self.devices[req.source_device].queue.append(t)
-        self._kick_all()
-
-    # -- preemption ------------------------------------------------------- #
-    def _preempt(self, dev: _WSDevice, victim: Task) -> None:
-        self._advance(dev)
-        run = dev.running.pop(victim)
-        victim.state = TaskState.PREEMPTED
-        victim.preempt_count += 1
-        m = self.rt.metrics
-        m.preemptions += 1
-        m.preempted_by_cores[run.cores] += 1
-        self._preempt_pending.add(victim)
-        # re-queue for re-stealing (the workstealer's "reallocation");
-        # all partial work is lost.
-        if self.central:
-            self.global_queue.appendleft(victim)
-        else:
-            self.devices[victim.source_device].queue.appendleft(victim)
-        self._reschedule(dev)
-
-    # -- completion ------------------------------------------------------- #
-    def _complete(self, dev: _WSDevice, task: Task) -> None:
-        rt, m = self.rt, self.rt.metrics
-        late = rt.q.now > task.deadline + 1e-9
-        task.state = TaskState.FAILED if late else TaskState.COMPLETED
-        if task.priority == Priority.HIGH:
-            if late:
-                m.hp_failed_runtime += 1
-            else:
-                m.hp_completed += 1
-                if task in self._via_preemption:
-                    m.hp_completed_via_preemption += 1
-                frame = self._frames_by_hp[task]
-                if frame.trace_value >= 1:
-                    rt.issue_lp_request(frame)
-        elif not late:
-            m.lp_completed += 1
-            if task.offloaded:
-                m.lp_offloaded_completed += 1
-            if task in self._preempt_pending:
-                self._preempt_pending.discard(task)
-                m.realloc_success += 1
-
-    # -- stealing --------------------------------------------------------- #
-    def _kick_all(self) -> None:
-        for dev in self.devices:
-            self._kick(dev)
-
-    def _kick(self, dev: _WSDevice) -> None:
-        rt = self.rt
-        # Steal while there are >= 2 uncommitted cores (running + in-flight,
-        # HP included); stealing is myopic (grab 4 cores when fully idle,
-        # else 2) and rash (no completion-feasibility check).
-        while dev.committed + 2 <= dev.capacity:
-            task, delay = self._acquire(dev)
-            if task is None:
-                break
-            cores = 4 if dev.committed == 0 else 2
-            # Rash (paper §8): stealers start tasks with no *completion*
-            # feasibility check — a task started with 5 s to its deadline
-            # burns cores until the deadline kill. Only tasks already past
-            # their deadline are dropped at steal time.
-            if rt.q.now + delay > task.deadline:
-                task.state = TaskState.FAILED
-                if task in self._preempt_pending:
-                    self._preempt_pending.discard(task)
-                    rt.metrics.realloc_failure += 1
-                else:
-                    rt.metrics.lp_failed_alloc += 1
-                continue
-            m = rt.metrics
-            m.lp_allocated += 1
-            offl = dev.idx != task.source_device
-            bucket = m.core_alloc_offloaded if offl else m.core_alloc_local
-            bucket[cores] += 1
-            if offl:
-                m.lp_offloaded += 1
-            if delay > 0:
-                dev.inflight += cores
-
-                def arrive(d=dev, t=task, c=cores) -> None:
-                    d.inflight -= c
-                    self._start(d, t, c)
-
-                self.rt.q.push(rt.q.now + delay, arrive)
-            else:
-                self._start(dev, task, cores)
-        if (
-            not self.central
-            and dev.committed + 2 <= dev.capacity
-            and dev.idx not in self._polling
-            and any(d.queue for d in self.devices)
-        ):
-            # decentralised: retry polling while idle
-            self._polling.add(dev.idx)
-
-            def poll_again() -> None:
-                self._polling.discard(dev.idx)
-                self._kick(dev)
-
-            rt.q.push(rt.q.now + 0.25, poll_again)
-
-    def _acquire(self, dev: _WSDevice) -> tuple[Optional[Task], float]:
-        net = self.rt.net
-        poll = 2 * net.slot(net.msg.state_update)
-        if self.central:
-            if self.global_queue:
-                task = self.global_queue.popleft()
-                delay = poll + (
-                    net.slot(net.msg.input_transfer)
-                    if task.source_device != dev.idx
-                    else 0.0
-                )
-                return task, delay
-            return None, 0.0
-        # decentralised: own queue first, then random polling order
-        if dev.queue:
-            return dev.queue.popleft(), 0.0
-        order = [d for d in self.devices if d is not dev]
-        self.rt.rng.shuffle(order)
-        delay = 0.0
-        for other in order:
-            delay += poll
-            if other.queue:
-                task = other.queue.popleft()
-                return task, delay + net.slot(net.msg.input_transfer)
-        return None, delay
-
-    def finalize(self) -> None:
-        m = self.rt.metrics
-        for task in self._preempt_pending:
-            m.realloc_failure += 1
-        self._preempt_pending.clear()
-        for q in [self.global_queue] + [d.queue for d in self.devices]:
-            for task in q:
-                if task.state in (TaskState.PENDING, TaskState.PREEMPTED):
-                    task.state = TaskState.FAILED
-                    m.lp_failed_alloc += 1
 
 
 def run_scenario(cfg: ScenarioConfig, net: Optional[NetworkConfig] = None) -> Metrics:

@@ -80,6 +80,21 @@ class TraceConfig:
         raise ValueError(f"unknown trace: {self.name}")
 
 
+#: Human-readable description of the accepted trace names (for errors).
+TRACE_FAMILIES = "uniform, weighted_1..weighted_4, ratio_P (0 <= P <= 100)"
+
+
+def validate_trace_name(name: str) -> None:
+    """Raise an early ValueError naming the accepted families for an
+    unknown trace string (instead of failing deep inside generation)."""
+    try:
+        TraceConfig(name).probabilities()
+    except (ValueError, AssertionError, KeyError, IndexError):
+        raise ValueError(
+            f"unknown trace {name!r}; expected one of: {TRACE_FAMILIES}"
+        ) from None
+
+
 def generate_trace(cfg: TraceConfig) -> np.ndarray:
     """Return an int array of shape [n_frames, n_devices]."""
     # zlib.crc32, NOT hash(): str hash is PYTHONHASHSEED-randomised per

@@ -1,0 +1,306 @@
+"""The unified SchedulingPolicy API: registry, Decision protocol,
+config validation, and reallocate() outcomes (DESIGN.md §9)."""
+import pytest
+
+from repro.core.calendar import NetworkState
+from repro.core.metrics import Metrics
+from repro.core.network import NetworkConfig
+from repro.core.policy import (
+    Decision,
+    DecisionStatus,
+    PolicyDispatcher,
+    SchedulerPolicy,
+    SchedulingPolicy,
+    create_policy,
+    register_policy,
+    registered_policies,
+)
+from repro.core.scheduler import HPResult, LPResult
+from repro.core.task import LowPriorityRequest, Priority, Task, TaskState
+from repro.sim import ScenarioConfig, run_scenario
+from repro.sim.events import EventQueue
+
+
+def lp_request(dev=0, deadline=30.0, n=1, frame=0):
+    req = LowPriorityRequest(source_device=dev, deadline=deadline,
+                             frame_id=frame, n_tasks=n)
+    req.make_tasks()
+    return req
+
+
+# --------------------------------------------------------------------- #
+# Registry                                                              #
+# --------------------------------------------------------------------- #
+def test_registry_contains_all_disciplines():
+    names = registered_policies()
+    for expected in ("scheduler", "central_ws", "decentral_ws",
+                     "edf_only", "no_offload"):
+        assert expected in names
+
+
+def test_create_policy_unknown_name_lists_options():
+    with pytest.raises(ValueError) as e:
+        create_policy("bogus", n_devices=4, net=NetworkConfig())
+    msg = str(e.value)
+    assert "bogus" in msg
+    for name in registered_policies():
+        assert name in msg
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+        @register_policy("scheduler")
+        class Clash(SchedulingPolicy):
+            pass
+
+
+def test_every_policy_constructs_with_uniform_kwargs():
+    """The registry contract: one construction signature fits all."""
+    for name in registered_policies():
+        p = create_policy(name, n_devices=4, net=NetworkConfig(),
+                          capacity=4, preemption=True,
+                          victim_policy="farthest_deadline",
+                          metrics=Metrics())
+        assert p.name == name
+        assert isinstance(p.drives_execution, bool)
+
+
+# --------------------------------------------------------------------- #
+# ScenarioConfig validation (early, named options)                      #
+# --------------------------------------------------------------------- #
+def test_scenario_config_rejects_unknown_algorithm():
+    with pytest.raises(ValueError) as e:
+        ScenarioConfig("x", "uniform", "not_a_policy", True)
+    assert "scheduler" in str(e.value) and "central_ws" in str(e.value)
+
+
+def test_scenario_config_rejects_unknown_trace():
+    with pytest.raises(ValueError) as e:
+        ScenarioConfig("x", "weighted_7", "scheduler", True)
+    assert "weighted_1..weighted_4" in str(e.value)
+
+
+def test_scenario_config_rejects_unknown_victim_policy():
+    with pytest.raises(ValueError) as e:
+        ScenarioConfig("x", "uniform", "scheduler", True,
+                       victim_policy="strongest_set")
+    assert "farthest_deadline" in str(e.value)
+
+
+def test_scenario_config_accepts_every_registered_policy():
+    for name in registered_policies():
+        cfg = ScenarioConfig(name, "uniform", name, True)
+        assert cfg.algorithm == name
+
+
+# --------------------------------------------------------------------- #
+# Decision shims                                                        #
+# --------------------------------------------------------------------- #
+def test_decision_from_hp_result():
+    ok = Decision.from_hp_result(HPResult(False))
+    assert ok.rejected and not ok.allocations
+    t = Task(priority=Priority.LOW, source_device=0, deadline=9.0, frame_id=0)
+    failed_with_victims = Decision.from_hp_result(
+        HPResult(False, preempted=[t]))
+    assert failed_with_victims.rejected and failed_with_victims.preempted == [t]
+
+
+def test_decision_from_lp_result_partial_is_admitted():
+    state = NetworkState(1)
+    net = NetworkConfig()
+    from repro.core.scheduler import PreemptionAwareScheduler
+    sched = PreemptionAwareScheduler(state, net)
+    state.devices[0].reserve(0.0, 1000.0, 2, "background")
+    req = lp_request(dev=0, deadline=120.0, n=2)
+    dec = Decision.from_lp_result(sched.allocate_low_priority(req, 0.0))
+    assert dec.admitted                    # partial allocation still admits
+    assert len(dec.allocations) == 1 and len(dec.failed) == 1
+    assert dec.predicted_completion == dec.allocations[0].t_end
+
+
+# --------------------------------------------------------------------- #
+# reallocate() through the Decision API                                 #
+# --------------------------------------------------------------------- #
+def _allocated_policy(n_devices=2):
+    """A SchedulerPolicy with one offloaded LP allocation in flight."""
+    net = NetworkConfig()
+    pol = create_policy("scheduler", n_devices=n_devices, net=net)
+    # fill the source device so the request offloads (gets an xfer slot)
+    pol.state.devices[0].reserve(0.0, 300.0, 4, "blocker")
+    req = lp_request(dev=0, deadline=120.0)
+    dec = pol.decide_lp(req, 0.0)
+    assert dec.admitted and dec.allocations[0].offloaded
+    return pol, req.tasks[0], dec.allocations[0]
+
+
+def _externally_preempt(pol, task):
+    # note: no device release — reallocate() itself must tear down the old
+    # placement (device slot + pending link slots) in one call
+    task.state = TaskState.PREEMPTED
+
+
+def test_reallocate_success_returns_admitted_decision():
+    pol, task, alloc = _allocated_policy()
+    _externally_preempt(pol, task)
+    dec = pol.reallocate(task, alloc.t_start + 1.0)
+    assert dec.admitted and len(dec.allocations) == 1
+    assert task.state == TaskState.ALLOCATED
+    assert dec.predicted_completion == dec.allocations[0].t_end
+    assert dec.allocations[0].t_end <= task.deadline
+    assert pol.metrics.realloc_success == 1
+    # the stale device reservation was released: exactly one device holds
+    # the task (its replacement slot)
+    assert sum(1 for d in pol.state.devices if d.get(task) is not None) == 1
+
+
+def test_reallocate_past_deadline_is_rejected():
+    pol, task, alloc = _allocated_policy()
+    _externally_preempt(pol, task)
+    dec = pol.reallocate(task, task.deadline + 5.0)
+    assert dec.rejected and dec.failed == [task]
+    assert task.state == TaskState.FAILED
+    assert pol.metrics.realloc_failure == 1
+
+
+def _jammed_policy():
+    """A SchedulerPolicy whose admitted LP task has its input-transfer slot
+    scheduled far in the future (link jammed), so the xfer is still PENDING
+    when the task is externally preempted."""
+    net = NetworkConfig()
+    pol = create_policy("scheduler", n_devices=2, net=net)
+    pol.state.devices[0].reserve(0.0, 300.0, 4, "blocker")   # force offload
+    pol.state.link.reserve(0.003, 40.0, "jam")               # delay the xfer
+    req = lp_request(dev=0, deadline=120.0)
+    dec = pol.decide_lp(req, 0.0)
+    assert dec.admitted and dec.allocations[0].offloaded
+    task = req.tasks[0]
+    xfer = next(s for s in pol.state.link.reservations()
+                if s.tag == ("xfer", task.task_id))
+    assert xfer.t1 >= 40.0                                   # still pending
+    return pol, task, dec.allocations[0]
+
+
+def test_failed_reallocation_releases_link_slots():
+    """A failed reallocation must cancel the task's still-pending xfer/update
+    link slots — leaving them reserved would permanently inflate link
+    congestion with traffic for a task that will never run."""
+    pol, task, alloc = _jammed_policy()
+    tags = [s.tag for s in pol.state.link.reservations()]
+    assert ("xfer", task.task_id) in tags
+    assert ("update", task.task_id) in tags
+    _externally_preempt(pol, task)
+    # saturate device 1 too, so the reallocation cannot land anywhere
+    pol.state.devices[1].reserve(0.0, 300.0, 4, "sat")
+    dec = pol.reallocate(task, 1.0)
+    assert dec.rejected
+    tags = [s.tag for s in pol.state.link.reservations()]
+    assert ("xfer", task.task_id) not in tags
+    assert ("update", task.task_id) not in tags
+
+
+def test_reallocate_success_replaces_link_slots():
+    """A successful reallocation re-reserves fresh link slots and cancels
+    every still-pending stale one (no leak on the shared link)."""
+    pol, task, alloc = _jammed_policy()
+    old = [s for s in pol.state.link.reservations()
+           if isinstance(s.tag, tuple) and s.tag[1] == task.task_id]
+    _externally_preempt(pol, task)
+    now = 1.0
+    dec = pol.reallocate(task, now)
+    assert dec.admitted
+    live = [s for s in pol.state.link.reservations()
+            if isinstance(s.tag, tuple) and s.tag[1] == task.task_id]
+    assert live                                       # fresh slots exist
+    stale = [s for s in old if s.t2 > now]            # were still pending
+    assert stale and not any(s in live for s in stale)
+
+
+def test_edf_reallocate_releases_previous_placement():
+    """The edf_only plugin applies the same reallocation hygiene as the
+    scheduler: old device slot released, pending link slots cancelled."""
+    net = NetworkConfig()
+    pol = create_policy("edf_only", n_devices=2, net=net)
+    req = lp_request(dev=0, deadline=120.0)
+    dec = pol.decide_lp(req, 0.0)
+    assert dec.admitted
+    task = req.tasks[0]
+    task.state = TaskState.PREEMPTED
+    now = 1.0
+    dec2 = pol.reallocate(task, now)
+    assert dec2.admitted
+    assert sum(1 for d in pol.state.devices if d.get(task) is not None) == 1
+    pending_updates = [s for s in pol.state.link.reservations()
+                       if s.tag == ("update", task.task_id) and s.t2 > now]
+    assert len(pending_updates) == 1          # only the fresh placement's
+
+
+def test_dispatcher_reallocate_arms_replacement_slot():
+    """PolicyDispatcher.reallocate: stop + re-place + arm in one call."""
+    q = EventQueue()
+    net = NetworkConfig()
+    metrics = Metrics()
+    pol = create_policy("scheduler", n_devices=2, net=net, metrics=metrics)
+    disp = PolicyDispatcher(pol, q, net, metrics)
+    req = lp_request(dev=0, deadline=120.0)
+    disp.submit_lp(req)
+    task = req.tasks[0]
+    assert task.state == TaskState.ALLOCATED
+    preempt_seen = []
+    pol.on_preempt = lambda t, now: preempt_seen.append(t)
+    _externally_preempt(pol, task)
+    dec = disp.reallocate(task)
+    assert preempt_seen == [task]
+    assert dec.admitted and task.state == TaskState.ALLOCATED
+
+
+# --------------------------------------------------------------------- #
+# New baselines behave as documented                                    #
+# --------------------------------------------------------------------- #
+def test_no_offload_never_offloads():
+    cfg = ScenarioConfig("no_off", "weighted_4", "no_offload", True,
+                         n_frames=120, seed=3)
+    m = run_scenario(cfg)
+    assert m.lp_offloaded == 0
+    assert m.lp_allocated > 0                 # local admissions still happen
+    assert m.hp_completed > 0
+
+
+def test_edf_only_runs_and_never_preempts():
+    cfg = ScenarioConfig("edf", "uniform", "edf_only", True,
+                         n_frames=120, seed=3)
+    m = run_scenario(cfg)
+    assert m.preemptions == 0
+    assert m.hp_completed > 0 and m.lp_completed > 0
+
+
+def test_scheduler_beats_edf_only_on_hp():
+    """The paper's discipline must dominate the greedy EDF baseline on
+    HP completion under the same workload."""
+    sched = run_scenario(ScenarioConfig("s", "uniform", "scheduler", True,
+                                        n_frames=150, seed=5))
+    edf = run_scenario(ScenarioConfig("e", "uniform", "edf_only", True,
+                                      n_frames=150, seed=5))
+    assert sched.pct(sched.hp_completed, sched.hp_generated) >= \
+        edf.pct(edf.hp_completed, edf.hp_generated)
+
+
+# --------------------------------------------------------------------- #
+# Serving engine drives registered policies (no engine edits needed)    #
+# --------------------------------------------------------------------- #
+def test_serving_engine_rejects_execution_driving_policy():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving.cost_model import CostModel, PhaseCost
+    from repro.serving.engine import PreemptiveServingEngine
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cost = CostModel()
+    cost.prefill[1] = PhaseCost(0.05, 0.005)
+    cost.decode[2] = PhaseCost(0.02, 0.002)
+    cost.decode[4] = PhaseCost(0.014, 0.0014)
+    with pytest.raises(ValueError) as e:
+        PreemptiveServingEngine(cfg, params, cost, n_slices=2,
+                                policy="central_ws")
+    assert "slot-based" in str(e.value)

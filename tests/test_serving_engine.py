@@ -104,6 +104,29 @@ def test_resume_mode_keeps_partial_decode(setup):
     assert victim.rid not in eng._decode_state
 
 
+def test_engine_drives_registered_policy(setup):
+    """The engine resolves its discipline through the policy registry
+    (DESIGN.md §9): running the edf_only baseline requires no engine edits —
+    real compute still lands in that policy's reserved slots."""
+    cfg, params, cost = setup
+    net = engine_network_config(cost, 4)
+    eng = PreemptiveServingEngine(cfg, params, cost, n_slices=2,
+                                  units_per_slice=4, net=net,
+                                  policy="edf_only")
+    hp = ServeRequest(prompt=_prompt(cfg), max_new_tokens=1,
+                      priority=Priority.HIGH, deadline=net.t_hp * 3 + 1.0,
+                      home_slice=0)
+    lp = ServeRequest(prompt=_prompt(cfg, 8), max_new_tokens=4,
+                      priority=Priority.LOW, deadline=60.0, home_slice=1)
+    eng.submit(hp)
+    eng.submit(lp)
+    m = eng.run()
+    assert hp.state == "done" and lp.state == "done"
+    assert len(lp.tokens_out) == 4
+    assert m.hp_completed == 1 and m.lp_completed == 1
+    assert m.preemptions == 0            # edf_only never preempts
+
+
 def test_submit_batch_admits_lp_burst(setup):
     """submit_batch routes LP requests through the scheduler's batch API
     (DESIGN.md §4.3) and HP requests through per-request admission; every
