@@ -38,13 +38,15 @@ from __future__ import annotations
 import argparse
 import time
 
+from dataclasses import replace
+
 from repro.core.calendar import NetworkState
 from repro.core.calendar_reference import ReferenceNetworkState
 from repro.core.network import NetworkConfig
 from repro.core.policy import registered_policies
 from repro.core.scheduler import PreemptionAwareScheduler
 from repro.core.task import LowPriorityRequest, Priority, Task, reset_id_counters
-from repro.sim.experiment import ScenarioConfig, run_scenario
+from repro.sim.experiment import MIXED_SCENARIOS, ScenarioConfig, run_scenario
 from repro.sim.scenarios import LargeNConfig, run_large_n, sweep_devices, sweep_mix
 
 Row = tuple[str, str, str, float]
@@ -260,6 +262,48 @@ def bench_policy_sweep(n_frames: int = 60) -> list[Row]:
 
 
 # --------------------------------------------------------------------- #
+# Heterogeneous workloads (core/profiles.py): mixed-model scenarios     #
+# --------------------------------------------------------------------- #
+def bench_mixed_workload(n_frames: int = 60) -> list[Row]:
+    """Run every mixed-model scenario (three profiles with distinct
+    benchmark tables, transfer sizes and deadlines) end-to-end, plus a
+    mixed large-N arrival stream; hard-fails if per-type accounting is
+    missing (the profile layer would have silently fallen back to one
+    model)."""
+    rows: list[Row] = []
+    for name, cfg in sorted(MIXED_SCENARIOS.items()):
+        t0 = time.perf_counter()
+        s = run_scenario(replace(cfg, n_frames=n_frames)).summary()
+        wall = time.perf_counter() - t0
+        types = s.get("task_types")
+        if not types or len(types) < 2:
+            raise RuntimeError(
+                f"mixed scenario {name!r} did not produce per-type "
+                f"accounting (task_types={types})"
+            )
+        rows.append(("mixed_workload", name, "frame_completion_pct",
+                     s["frame_completion_pct"]))
+        rows.append(("mixed_workload", name, "lp_completion_pct",
+                     s["lp_completion_pct"]))
+        for t, counts in types.items():
+            done = counts.get("lp_completed", 0)
+            alloc = counts.get("lp_allocated", 0)
+            rows.append(("mixed_workload", name, f"lp_completed[{t}]",
+                         float(done)))
+            rows.append(("mixed_workload", name, f"lp_allocated[{t}]",
+                         float(alloc)))
+        rows.append(("mixed_workload", name, "wall_s", wall))
+
+    cfg = LargeNConfig(name="mixed_large_n", n_devices=16, duration=20.0,
+                       workload="mixed_edge")
+    s = run_large_n(cfg, batch_window=0.25)
+    for k in ("hp_admitted", "lp_allocated", "lp_failed",
+              "lp_alloc_us_mean", "wall_s"):
+        rows.append(("mixed_workload", cfg.name, k, float(s[k])))
+    return rows
+
+
+# --------------------------------------------------------------------- #
 # Large-N scenario suite end-to-end                                     #
 # --------------------------------------------------------------------- #
 def bench_large_n(quick: bool = False) -> list[Row]:
@@ -298,6 +342,8 @@ def bench_all(quick: bool = False) -> list[Row]:
     rows: list[Row] = []
     rows += bench_policy_sweep()   # hard-fails if any registry entry breaks
     gc.collect()                   # isolate benches from each other's garbage
+    rows += bench_mixed_workload(40 if quick else 80)  # hard-fails untyped
+    gc.collect()
     rows += bench_scheduler_scaling()
     gc.collect()
     if quick:

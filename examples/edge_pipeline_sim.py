@@ -9,19 +9,22 @@ headline comparison (paper §6):
   PYTHONPATH=src python examples/edge_pipeline_sim.py --scenario WPS_4
 
 Scenario ids follow the paper's Table 1 legend (UPS, UNPS, WPS_1..4,
-WNPS_4, DPW, DNPW, CPW, CNPW).
+WNPS_4, DPW, DNPW, CPW, CNPW), plus the beyond-paper mixed-model fleet
+(MPS, MNPS, MPS_W4 — DESIGN.md §10).
 """
 import argparse
 from dataclasses import replace
 
-from repro.sim.experiment import SCENARIOS, run_scenario
+from repro.sim.experiment import MIXED_SCENARIOS, SCENARIOS, run_scenario
+
+ALL_SCENARIOS = {**SCENARIOS, **MIXED_SCENARIOS}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--frames", type=int, default=300,
                     help="paper uses 1296 (~15s on this host)")
-    ap.add_argument("--scenario", choices=tuple(SCENARIOS), default=None,
+    ap.add_argument("--scenario", choices=tuple(ALL_SCENARIOS), default=None,
                     help="run one scenario verbosely instead of the sweep")
     args = ap.parse_args()
 
@@ -31,7 +34,7 @@ def main() -> None:
     print(f"{'scenario':8s} {'frames%':>8s} {'HP%':>7s} {'HP-preempt%':>11s} "
           f"{'LP%':>7s} {'LP/req%':>8s} {'preempts':>8s} {'realloc ok':>10s}")
     for name in names:
-        cfg = replace(SCENARIOS[name], n_frames=args.frames)
+        cfg = replace(ALL_SCENARIOS[name], n_frames=args.frames)
         m = run_scenario(cfg)
         s = m.summary()
         print(f"{name:8s} {s['frame_completion_pct']:8.2f} "

@@ -4,6 +4,14 @@
 from .calendar import DeviceCalendar, LinkCalendar, NetworkState, Reservation
 from .metrics import Metrics
 from .network import MessageSizes, NetworkConfig
+from .profiles import (
+    PAPER_TYPE,
+    TaskProfile,
+    WorkloadSpec,
+    get_workload,
+    register_workload,
+    registered_workloads,
+)
 from .policy import (
     Decision,
     DecisionStatus,
@@ -36,15 +44,21 @@ __all__ = [
     "Metrics",
     "NetworkConfig",
     "NetworkState",
+    "PAPER_TYPE",
     "PolicyDispatcher",
     "PreemptionAwareScheduler",
     "Priority",
     "Reservation",
     "SchedulingPolicy",
     "Task",
+    "TaskProfile",
     "TaskState",
     "VICTIM_POLICIES",
+    "WorkloadSpec",
     "create_policy",
+    "get_workload",
     "register_policy",
+    "register_workload",
     "registered_policies",
+    "registered_workloads",
 ]

@@ -53,11 +53,22 @@ class Metrics:
     t_lp_alloc: list[float] = field(default_factory=list)
     t_realloc: list[float] = field(default_factory=list)
 
+    # Heterogeneous workloads (core/profiles.py): outcome counters per task
+    # type.  Un-annotated tasks (task_type=None — the paper's single-model
+    # world) record nothing here, so legacy summaries stay byte-identical.
+    task_type_counts: dict[str, Counter] = field(default_factory=dict)
+
+    def count_type(self, task_type, key: str, n: int = 1) -> None:
+        """Bump a per-task-type outcome counter (no-op for untyped tasks)."""
+        if task_type is None:
+            return
+        self.task_type_counts.setdefault(task_type, Counter())[key] += n
+
     def pct(self, num: int, den: int) -> float:
         return 100.0 * num / den if den else 0.0
 
     def summary(self) -> dict[str, Any]:
-        return {
+        out: dict[str, Any] = {
             "scenario": self.scenario,
             "frames_total": self.frames_total,
             "frame_completion_pct": round(
@@ -96,3 +107,12 @@ class Metrics:
             "t_lp_alloc_ms": round(_mean_ms(self.t_lp_alloc), 3),
             "t_realloc_ms": round(_mean_ms(self.t_realloc), 3),
         }
+        if self.task_type_counts:
+            # Present only for heterogeneous workloads: single-model (paper)
+            # summaries keep their historic key set, which the golden-replay
+            # suite compares with exact dict equality.
+            out["task_types"] = {
+                t: dict(sorted(c.items()))
+                for t, c in sorted(self.task_type_counts.items())
+            }
+        return out

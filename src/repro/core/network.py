@@ -13,6 +13,10 @@ measured network jitter, processing slots with the benchmark std-dev (§3).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import cached_property
+from typing import Optional
+
+from .profiles import PAPER_TYPE, TaskProfile, WorkloadSpec, get_workload
 
 
 @dataclass(frozen=True)
@@ -64,28 +68,101 @@ class NetworkConfig:
     lp_contention_coef: float = 0.05
     hp_contention_coef: float = 0.03
 
+    # Heterogeneous workloads (core/profiles.py): a WorkloadSpec mapping task
+    # types to per-(type x core config) benchmark profiles.  None (the
+    # default) derives a single-profile spec from the paper constants above —
+    # bit-for-bit the seed's timing model.
+    workload: Optional[WorkloadSpec] = None
+
+    @cached_property
+    def spec(self) -> WorkloadSpec:
+        """The active workload spec (derived from the paper constants when
+        no explicit ``workload`` was given)."""
+        if self.workload is not None:
+            return self.workload
+        return WorkloadSpec.from_paper_constants(
+            t_hp=self.t_hp,
+            hp_pad_s=self.hp_pad_s,
+            t_lp_2core=self.t_lp_2core,
+            t_lp_4core=self.t_lp_4core,
+            lp_pad_s=self.lp_pad_s,
+            input_bytes=self.msg.input_transfer,
+            output_bytes=self.msg.state_update,
+            hp_deadline_slack=self.hp_deadline_slack,
+        )
+
+    def profile(self, task_type: Optional[str] = None) -> TaskProfile:
+        """The benchmark profile for a task type (None -> default type)."""
+        return self.spec.profile(task_type)
+
     def slot(self, n_bytes: int) -> float:
         """Duration of a padded link time-slot for an n-byte message."""
         return n_bytes / self.throughput_bps + self.jitter_pad_s
 
-    def lp_proc_time(self, cores: int) -> float:
-        if cores == 2:
-            return self.t_lp_2core
-        if cores == 4:
-            return self.t_lp_4core
-        raise ValueError(f"unsupported LP core configuration: {cores}")
+    def input_transfer_slot(self, task_type: Optional[str] = None) -> float:
+        """Padded link-slot duration of one offload input transfer."""
+        return self.slot(self.profile(task_type).input_bytes)
 
-    def lp_slot_time(self, cores: int) -> float:
-        return self.lp_proc_time(cores) + self.lp_pad_s
+    def hp_proc_time(self, task_type: Optional[str] = None) -> float:
+        return self.profile(task_type).hp_exec
+
+    def lp_proc_time(self, cores: int,
+                     task_type: Optional[str] = None) -> float:
+        return self.profile(task_type).lp_proc_time(cores)
+
+    def lp_slot_time(self, cores: int,
+                     task_type: Optional[str] = None) -> float:
+        return self.profile(task_type).lp_slot_time(cores)
 
     @property
     def hp_slot_time(self) -> float:
-        return self.t_hp + self.hp_pad_s
+        return self.profile().hp_slot_time
+
+    def hp_slot_time_for(self, task_type: Optional[str] = None) -> float:
+        return self.profile(task_type).hp_slot_time
 
     @property
     def lp_core_options(self) -> tuple[int, ...]:
         """Viable horizontal-partitioning configs, minimum first (§3.2)."""
-        return (2, 4)
+        return self.profile().core_options
 
-    def hp_deadline(self, request_time: float) -> float:
-        return request_time + self.t_hp + self.hp_deadline_slack
+    def lp_core_options_for(
+        self, task_type: Optional[str] = None
+    ) -> tuple[int, ...]:
+        return self.profile(task_type).core_options
+
+    def hp_deadline(self, request_time: float,
+                    task_type: Optional[str] = None) -> float:
+        return self.profile(task_type).hp_deadline(request_time)
+
+
+def resolve_network(net: Optional[NetworkConfig],
+                    workload_name: str) -> NetworkConfig:
+    """The one place a runtime reconciles an (optional) explicit
+    ``NetworkConfig`` with a scenario's named workload.
+
+    * ``net is None``: build the config for the workload — ``"paper"``
+      derives the spec from the config's own constants (so custom constants
+      keep working), any other name resolves through the registry.
+    * explicit ``net``: it wins (its constants AND its spec), but it must be
+      able to answer every task type the named workload will generate —
+      a mixed scenario handed a single-model net fails HERE with a clear
+      error instead of deep inside the event loop when the first typed
+      task asks for its profile.
+    """
+    if net is None:
+        spec = (None if workload_name == PAPER_TYPE
+                else get_workload(workload_name))
+        return NetworkConfig(workload=spec)
+    if workload_name != PAPER_TYPE:
+        want = get_workload(workload_name)
+        missing = [t for t in want.task_types if t not in net.spec.profiles]
+        if missing:
+            raise ValueError(
+                f"explicit NetworkConfig carries workload "
+                f"{net.spec.name!r}, which lacks task type(s) {missing} "
+                f"required by scenario workload {workload_name!r}; pass "
+                f"NetworkConfig(workload=get_workload({workload_name!r})) "
+                "or drop the explicit net"
+            )
+    return net

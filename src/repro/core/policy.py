@@ -300,6 +300,7 @@ class PolicyDispatcher:
         if dec.rejected:
             task.state = TaskState.FAILED
             self.metrics.hp_failed_alloc += 1
+            self.metrics.count_type(task.task_type, "hp_failed_alloc")
             self.client.on_admit_fail(task)
         else:
             if dec.preempted:
@@ -348,6 +349,7 @@ class PolicyDispatcher:
         self.metrics.lp_failed_alloc += len(dec.failed)
         for task in dec.failed:
             task.state = TaskState.FAILED
+            self.metrics.count_type(task.task_type, "lp_failed_alloc")
             self.client.on_admit_fail(task)
         for alloc in dec.allocations:
             self.lp_started(alloc.task, alloc.cores, alloc.offloaded)
@@ -436,6 +438,7 @@ class PolicyDispatcher:
         """An execution-driving policy started an LP task on ``cores``."""
         m = self.metrics
         m.lp_allocated += 1
+        m.count_type(task.task_type, "lp_allocated")
         bucket = (m.core_alloc_offloaded if offloaded
                   else m.core_alloc_local)
         bucket[cores] += 1
@@ -447,6 +450,9 @@ class PolicyDispatcher:
         slot execution modes and execution-driving policies."""
         m = self.metrics
         task.state = TaskState.FAILED if late else TaskState.COMPLETED
+        prefix = "hp" if task.priority == Priority.HIGH else "lp"
+        m.count_type(task.task_type,
+                     f"{prefix}_{'failed_runtime' if late else 'completed'}")
         if task.priority == Priority.HIGH:
             if late:
                 m.hp_failed_runtime += 1
@@ -557,20 +563,21 @@ class EDFOnlyPolicy(CalendarPolicy):
 
     def decide_hp(self, task: Task, now: float) -> Decision:
         net, link = self.net, self.state.link
+        prof = net.profile(task.task_type)
         self.state.gc(now)
         self.links.prune(now)
         dev = self.state.devices[task.source_device]
         msg_dur = net.slot(net.msg.hp_alloc)
         msg_t1 = link.earliest_slot(msg_dur, now)
         arrival = msg_t1 + msg_dur
-        t1 = dev.earliest_fit(net.hp_slot_time, arrival, 1)
-        if t1 + net.t_hp > task.deadline:
+        t1 = dev.earliest_fit(prof.hp_slot_time, arrival, 1)
+        if t1 + prof.hp_exec > task.deadline:
             return Decision(DecisionStatus.REJECTED, failed=[task])
-        t2 = t1 + net.hp_slot_time
+        t2 = t1 + prof.hp_slot_time
         slots = [link.reserve(msg_t1, msg_t1 + msg_dur,
                               ("hp_alloc", task.task_id))]
         dev.reserve(t1, t2, 1, task)
-        upd_dur = net.slot(net.msg.state_update)
+        upd_dur = net.slot(prof.output_bytes)
         slots.append(link.reserve_earliest(upd_dur, t2,
                                            ("update", task.task_id)))
         self.links.record(task.task_id, slots)
@@ -583,14 +590,15 @@ class EDFOnlyPolicy(CalendarPolicy):
 
     def _place_lp(self, task: Task, now: float, deadline: float) -> Optional[Allocation]:
         net, link = self.net, self.state.link
-        cores = net.lp_core_options[0]
-        proc = net.lp_slot_time(cores)
+        prof = net.profile(task.task_type)
+        cores = prof.core_options[0]
+        proc = prof.lp_slot_time(cores)
         msg_dur = net.slot(net.msg.lp_alloc)
         msg_t1 = link.earliest_slot(msg_dur, now)
         arrival = msg_t1 + msg_dur
         sdev = self.state.devices[task.source_device]
         best_dev, best_t1, offloaded = sdev, sdev.earliest_fit(proc, arrival, cores), False
-        xfer_dur = net.slot(net.msg.input_transfer)
+        xfer_dur = net.slot(prof.input_bytes)
         xfer_t1 = link.earliest_slot(xfer_dur, arrival)
         t1_off = xfer_t1 + xfer_dur
         for d in self.state.devices:
@@ -608,7 +616,7 @@ class EDFOnlyPolicy(CalendarPolicy):
             slots.append(link.reserve(xfer_t1, xfer_t1 + xfer_dur,
                                       ("xfer", task.task_id)))
         best_dev.reserve(t1, t2, cores, task)
-        upd_dur = net.slot(net.msg.state_update)
+        upd_dur = net.slot(prof.output_bytes)
         slots.append(link.reserve_earliest(upd_dur, t2,
                                            ("update", task.task_id)))
         self.links.record(task.task_id, slots)

@@ -170,6 +170,7 @@ class PreemptionAwareScheduler:
     def _hp_inner(self, task: Task, now: float) -> HPResult:
         net, link = self.net, self.state.link
         dev = self.state.devices[task.source_device]
+        prof = net.profile(task.task_type)
         msg_dur = net.slot(net.msg.hp_alloc)
 
         def placement():
@@ -179,9 +180,9 @@ class PreemptionAwareScheduler:
             message (and hence the processing window) later."""
             msg_t1 = link.earliest_slot(msg_dur, now)
             arrival = msg_t1 + msg_dur
-            if arrival + net.t_hp > task.deadline:
+            if arrival + prof.hp_exec > task.deadline:
                 return None
-            return msg_t1, arrival, arrival + net.hp_slot_time
+            return msg_t1, arrival, arrival + prof.hp_slot_time
 
         plan = placement()
         if plan is None:
@@ -275,7 +276,10 @@ class PreemptionAwareScheduler:
         dev = self.state.devices[task.source_device]
         slots = [link.reserve(msg_t1, msg_t1 + msg_dur, ("hp_alloc", task.task_id))]
         dev.reserve(t1, t2, 1, task)
-        upd_dur = net.slot(net.msg.state_update)
+        # completion state-update sized by the task's own profile (the paper
+        # profile's output_bytes IS msg.state_update, so the default world
+        # is unchanged)
+        upd_dur = net.slot(net.profile(task.task_type).output_bytes)
         slots.append(link.reserve_earliest(upd_dur, t2, ("update", task.task_id)))
         task.state = TaskState.ALLOCATED
         task.device, task.cores = task.source_device, 1
@@ -309,19 +313,18 @@ class PreemptionAwareScheduler:
         for tp in time_points:
             if not unallocated:
                 break
-            round_hint: object = False        # computed lazily, once per tp
+            round_hints: dict = {}            # per-profile, lazily per tp
             for task in list(unallocated):
                 hint = hints.get(task.task_id)
                 if hint is not None and \
-                        self._refresh_ctx(ctx, tp)["t1_off"] < hint - EPS:
+                        self._task_t1_off(ctx, tp, task) < hint - EPS:
                     continue
                 alloc = self._allocate_lp_task(task, tp, deadline, ctx)
                 if alloc is not None:
                     unallocated.remove(task)
                     result.allocations.append(alloc)
                     continue
-                if round_hint is False:
-                    round_hint = self._hint_start(tp)
+                round_hint = self._round_hint(round_hints, tp, task)
                 if round_hint is not None:
                     hints[task.task_id] = round_hint
             # upgrade pass: try to give every allocated task more cores
@@ -345,45 +348,75 @@ class PreemptionAwareScheduler:
 
     def _refresh_ctx(self, ctx: dict, tp: float) -> dict:
         """(Re)derive the link-dependent placement windows for time-point
-        ``tp``: the allocation-message slot, the resulting ``arrival``, and
-        the offloaded execution start ``t1_off`` (end of the input-transfer
-        slot).  These are identical for every task probed at the same
-        time-point while nothing commits, so they are memoised in ``ctx``
-        (a commit invalidates it).  Probing does not mutate the link."""
+        ``tp``: the allocation-message slot and the resulting ``arrival``.
+        These are identical for every task probed at the same time-point
+        while nothing commits, so they are memoised in ``ctx`` (a commit
+        invalidates it).  Profile-dependent windows — the input transfer and
+        the offloaded execution start — live in per-profile sub-memos
+        (``_profile_ctx``).  Probing does not mutate the link."""
         if ctx.get("valid") and ctx.get("tp") == tp:
             return ctx
         net, link = self.net, self.state.link
         msg_dur = net.slot(net.msg.lp_alloc)
         msg_t1 = link.earliest_slot(msg_dur, tp)
         arrival = msg_t1 + msg_dur
-        xfer_dur = net.slot(net.msg.input_transfer)
-        xfer_t1 = link.earliest_slot(xfer_dur, arrival)
         ctx.clear()
         ctx.update(tp=tp, valid=True, msg_t1=msg_t1, msg_dur=msg_dur,
-                   arrival=arrival, xfer_dur=xfer_dur, xfer_t1=xfer_t1,
-                   t1_off=xfer_t1 + xfer_dur, feasible=None)
+                   arrival=arrival, prof={})
         return ctx
 
-    def _hint_start(self, tp: float) -> Optional[float]:
-        """Earliest instant ANY device could start a minimum-config LP task,
-        given occupancy as of now.  It is task-independent and a valid lower
-        bound until occupancy *shrinks* (reservations only ever get added
-        during a request sweep; core upgrades are the one shrinking case and
+    def _profile_ctx(self, ctx: dict, prof) -> dict:
+        """Per-profile slice of the placement memo: the input-transfer slot
+        (sized by the profile's ``input_bytes``), the offloaded execution
+        start ``t1_off``, and the network-wide offload feasibility scan
+        (which depends on the profile's min-config duration).  Tasks of the
+        same type probed at the same time-point share all of it."""
+        sub = ctx["prof"].get(prof.name)
+        if sub is None:
+            link = self.state.link
+            xfer_dur = self.net.slot(prof.input_bytes)
+            xfer_t1 = link.earliest_slot(xfer_dur, ctx["arrival"])
+            sub = ctx["prof"][prof.name] = dict(
+                xfer_dur=xfer_dur, xfer_t1=xfer_t1,
+                t1_off=xfer_t1 + xfer_dur, feasible=None)
+        return sub
+
+    def _task_t1_off(self, ctx: dict, tp: float, task: Task) -> float:
+        """The offloaded execution start a task would see at ``tp``."""
+        prof = self.net.profile(task.task_type)
+        return self._profile_ctx(self._refresh_ctx(ctx, tp), prof)["t1_off"]
+
+    def _round_hint(self, round_hints: dict, tp: float,
+                    task: Task) -> Optional[float]:
+        """`_hint_start` for the task's profile, computed lazily once per
+        (time-point, profile) — every same-type task failing a full scan at
+        the same time-point shares the bound."""
+        prof = self.net.profile(task.task_type)
+        if prof.name not in round_hints:
+            round_hints[prof.name] = self._hint_start(tp, prof)
+        return round_hints[prof.name]
+
+    def _hint_start(self, tp: float, prof) -> Optional[float]:
+        """Earliest instant ANY device could start a minimum-config LP task
+        of profile ``prof``, given occupancy as of now.  It is
+        task-independent (within a task type) and a valid lower bound until
+        occupancy *shrinks* (reservations only ever get added during a
+        request sweep; core upgrades are the one shrinking case and
         `_upgrade_pass` scopes the invalidation).
 
         A time-point can then be skipped for a hinted task when BOTH of its
         candidate execution starts — local ``arrival`` and offloaded
         ``t1_off`` — lie below the bound (``t1_off >= arrival``, so checking
         ``t1_off`` suffices).  The comparison must use the *actual*
-        link-derived windows of that time-point (`_refresh_ctx`), never
+        link-derived windows of that time-point (`_task_t1_off`), never
         ``tp`` itself: link congestion can push the windows far past ``tp``,
         to where a device has already freed up.  Returns None when the
         calendars don't support skyline queries (reference implementation)."""
         devices = self.state.devices
         if not devices or not hasattr(devices[0], "earliest_fit"):
             return None
-        cores_min = self.net.lp_core_options[0]
-        proc_min = self.net.lp_slot_time(cores_min)
+        cores_min = prof.core_options[0]
+        proc_min = prof.lp_slot_time(cores_min)
         return min(d.earliest_fit(proc_min, tp, cores_min) for d in devices)
 
     def _upgrade_pass(self, allocations, hints: dict[int, float]) -> list[float]:
@@ -398,8 +431,13 @@ class PreemptionAwareScheduler:
 
         Returns the upgraded allocations' new completion times so the batch
         sweep can keep its time-point grid in sync (an upgrade moves a
-        completion point earlier; the stale point is already in the grid)."""
-        proc_min = self.net.lp_slot_time(self.net.lp_core_options[0])
+        completion point earlier; the stale point is already in the grid).
+
+        ``proc_min`` is the workload-wide minimum min-config slot duration:
+        with heterogeneous profiles a freed tail might admit the *fastest*
+        task type, so the threshold must use its duration (for the paper's
+        single-profile spec this is exactly the old global constant)."""
+        proc_min = self.net.spec.min_lp_slot_time
         new_ends: list[float] = []
         for alloc in allocations:
             if self._try_upgrade(alloc):
@@ -472,7 +510,7 @@ class PreemptionAwareScheduler:
             while pending:
                 still: list[tuple[float, int, int, Task]] = []
                 progressed: set[int] = set()
-                round_hint: object = False    # computed lazily, once per tp
+                round_hints: dict = {}        # per-profile, lazily per tp
                 for item in pending:
                     deadline, _, ridx, task = item
                     if deadline <= tp + EPS:
@@ -481,18 +519,17 @@ class PreemptionAwareScheduler:
                         continue
                     hint = hints.get(task.task_id)
                     if hint is not None and \
-                            self._refresh_ctx(ctx, tp)["t1_off"] < hint - EPS:
+                            self._task_t1_off(ctx, tp, task) < hint - EPS:
                         still.append(item)
                         continue
                     alloc = self._allocate_lp_task(task, tp, deadline, ctx)
                     if alloc is None:
-                        if round_hint is False:
-                            round_hint = self._hint_start(tp)
+                        round_hint = self._round_hint(round_hints, tp, task)
                         if round_hint is not None:
                             hints[task.task_id] = round_hint
                         still.append(item)
                         continue
-                    round_hint = False        # occupancy grew; recompute
+                    round_hints.clear()       # occupancy grew; recompute
                     results[ridx].allocations.append(alloc)
                     progressed.add(ridx)
                     if tp + EPS < alloc.t_end < max_dl - EPS:
@@ -513,7 +550,10 @@ class PreemptionAwareScheduler:
                 # provably useless for EVERY pending task, so skip whole
                 # rounds, not just tasks.  As in the per-task skip, the
                 # comparison needs the candidate's link-derived windows,
-                # not the raw grid time.
+                # not the raw grid time — and with heterogeneous profiles
+                # the LATEST execution start any pending type would see
+                # (the largest input transfer), so the skip stays a safe
+                # over-approximation for every profile at once.
                 floor_hint: Optional[float] = None
                 for item in pending:
                     h = hints.get(item[3].task_id)
@@ -522,13 +562,16 @@ class PreemptionAwareScheduler:
                         break
                     if floor_hint is None or h < floor_hint:
                         floor_hint = h
+                worst_prof = self.net.profile(
+                    self.net.spec.max_input_bytes_type)
                 nxt = None
                 while tp_heap:
                     cand = heapq.heappop(tp_heap)
                     if cand <= tp + EPS:
                         continue
                     if floor_hint is not None and \
-                            self._refresh_ctx(ctx, cand)["t1_off"] < \
+                            self._profile_ctx(self._refresh_ctx(ctx, cand),
+                                              worst_prof)["t1_off"] < \
                             floor_hint - EPS:
                         continue
                     nxt = cand
@@ -588,8 +631,9 @@ class PreemptionAwareScheduler:
           O(devices) scan.  A commit invalidates the context.
         """
         net, link = self.net, self.state.link
-        cores = net.lp_core_options[0]          # minimum viable config
-        proc = net.lp_slot_time(cores)
+        prof = net.profile(task.task_type)
+        cores = prof.core_options[0]            # minimum viable config
+        proc = prof.lp_slot_time(cores)
         if ctx is None:
             ctx = {}
         self._refresh_ctx(ctx, tp)
@@ -605,17 +649,19 @@ class PreemptionAwareScheduler:
         elif not self.allow_offload:
             return None
         else:
-            xfer_t1, xfer_dur = ctx["xfer_t1"], ctx["xfer_dur"]
-            t1 = ctx["t1_off"]
+            sub = self._profile_ctx(ctx, prof)
+            xfer_t1, xfer_dur = sub["xfer_t1"], sub["xfer_dur"]
+            t1 = sub["t1_off"]
             if t1 + proc > deadline:
                 return None
-            if ctx["feasible"] is None:
-                # All offloaded candidates share the same transfer slot,
-                # hence the same execution window and feasibility scan.
-                ctx["feasible"] = [
+            if sub["feasible"] is None:
+                # All offloaded candidates of one task type share the same
+                # transfer slot, hence the same execution window and
+                # feasibility scan.
+                sub["feasible"] = [
                     d for d in self.state.devices if d.fits(t1, t1 + proc, cores)
                 ]
-            cands = [d for d in ctx["feasible"] if d.device != source]
+            cands = [d for d in sub["feasible"] if d.device != source]
             if not cands:
                 return None
             # even spreading: least load over the deadline window
@@ -631,7 +677,7 @@ class PreemptionAwareScheduler:
                 link.reserve(xfer_t1, xfer_t1 + xfer_dur, ("xfer", task.task_id))
             )
         dev.reserve(t1, t2, cores, task)
-        upd_dur = net.slot(net.msg.state_update)
+        upd_dur = net.slot(prof.output_bytes)
         slots.append(link.reserve_earliest(upd_dur, t2, ("update", task.task_id)))
         task.state = TaskState.ALLOCATED
         task.device, task.cores = dev.device, cores
@@ -641,8 +687,8 @@ class PreemptionAwareScheduler:
 
     def _try_upgrade(self, alloc: Allocation) -> bool:
         """Improve an allocation by raising its core configuration (§4)."""
-        net = self.net
-        options = [c for c in net.lp_core_options if c > alloc.cores]
+        prof = self.net.profile(alloc.task.task_type)
+        options = [c for c in prof.core_options if c > alloc.cores]
         if not options:
             return False
         dev = self.state.devices[alloc.device]
@@ -650,7 +696,7 @@ class PreemptionAwareScheduler:
         if res is None:
             return False
         for cores in reversed(options):          # largest improvement first
-            t2 = alloc.t_start + net.lp_slot_time(cores)
+            t2 = alloc.t_start + prof.lp_slot_time(cores)
             dev.release(alloc.task)
             if t2 <= alloc.task.deadline and dev.fits(alloc.t_start, t2, cores):
                 dev.reserve(alloc.t_start, t2, cores, alloc.task)

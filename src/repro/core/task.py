@@ -48,6 +48,10 @@ class Task:
     deadline: float
     frame_id: int
     request_id: Optional[int] = None       # LP tasks belong to a request set
+    # Workload-profile key (core/profiles.py): which benchmark table sizes
+    # this task's slots.  None = the workload spec's default profile (the
+    # paper's single-model pipeline needs no annotations).
+    task_type: Optional[str] = None
     task_id: int = field(default_factory=lambda: next(_task_ids))
     state: TaskState = TaskState.PENDING
     # Filled in by the scheduler on allocation:
@@ -83,6 +87,7 @@ class LowPriorityRequest:
     frame_id: int
     n_tasks: int
     created_at: float = 0.0
+    task_type: Optional[str] = None        # workload-profile key (see Task)
     request_id: int = field(default_factory=lambda: next(_request_ids))
     tasks: list[Task] = field(default_factory=list)
 
@@ -94,6 +99,7 @@ class LowPriorityRequest:
                 deadline=self.deadline,
                 frame_id=self.frame_id,
                 request_id=self.request_id,
+                task_type=self.task_type,
                 created_at=self.created_at,
             )
             for _ in range(self.n_tasks)
@@ -122,6 +128,7 @@ class Frame:
     trace_value: int
     frame_id: int
     deadline: float
+    task_type: Optional[str] = None        # workload-profile key (see Task)
     hp_task: Optional[Task] = None
     lp_request: Optional[LowPriorityRequest] = None
 

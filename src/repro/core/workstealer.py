@@ -145,11 +145,12 @@ class WorkstealingPolicy(SchedulingPolicy):
             task.priority == Priority.LOW and dev.idx != task.source_device
         )
         task.state = TaskState.RUNNING
+        prof = self.net.profile(task.task_type)
         if task.priority == Priority.HIGH:
-            base = self.net.t_hp
+            base = prof.hp_exec
             sigma = host.hp_noise_sigma
         else:
-            base = self.net.lp_proc_time(cores)
+            base = prof.lp_proc_time(cores)
             sigma = host.lp_noise_sigma
         work = base * cores
         if host.exec_noise:
@@ -240,7 +241,11 @@ class WorkstealingPolicy(SchedulingPolicy):
             task, delay = self._acquire(dev)
             if task is None:
                 break
-            cores = 4 if dev.committed == 0 else 2
+            # Myopic core choice from the task's own benchmark profile:
+            # max config when fully idle, min config otherwise (the paper's
+            # (2, 4) world picks 4 / 2 exactly as before).
+            opts = self.net.lp_core_options_for(task.task_type)
+            cores = opts[-1] if dev.committed == 0 else opts[0]
             # Rash (paper §8): stealers start tasks with no *completion*
             # feasibility check — a task started with 5 s to its deadline
             # burns cores until the deadline kill. Only tasks already past
@@ -286,7 +291,7 @@ class WorkstealingPolicy(SchedulingPolicy):
             if self.global_queue:
                 task = self.global_queue.popleft()
                 delay = poll + (
-                    net.slot(net.msg.input_transfer)
+                    net.input_transfer_slot(task.task_type)
                     if task.source_device != dev.idx
                     else 0.0
                 )
@@ -302,7 +307,7 @@ class WorkstealingPolicy(SchedulingPolicy):
             delay += poll
             if other.queue:
                 task = other.queue.popleft()
-                return task, delay + net.slot(net.msg.input_transfer)
+                return task, delay + net.input_transfer_slot(task.task_type)
         return None, delay
 
     def finalize(self, now: float) -> None:

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from ..core.metrics import Metrics
 from ..core.network import NetworkConfig
 from ..core.policy import DispatchClient, PolicyDispatcher, create_policy
+from ..core.profiles import WorkloadSpec
 from ..core.task import LowPriorityRequest, Priority, Task, TaskState
 from ..models.config import ModelConfig
 from ..sim.events import EventQueue
@@ -48,23 +49,38 @@ _rid = itertools.count()
 
 
 def engine_network_config(cost: CostModel, lp_tokens: int,
-                          link_gbps: float = 40.0) -> NetworkConfig:
+                          link_gbps: float = 40.0,
+                          workload: Optional[WorkloadSpec] = None,
+                          ) -> NetworkConfig:
     """Build the time-slot model from measured step costs (the paper derives
     slot lengths from offline benchmarks + std-dev padding; we do the same
     from the CostModel).  The 'link' is the inter-slice interconnect; message
     sizes keep the paper's control-plane values, with the input transfer
-    sized as a prompt's KV handoff."""
+    sized as a prompt's KV handoff.
+
+    The timing model is a real :class:`WorkloadSpec` (built from ``cost``
+    via ``WorkloadSpec.from_cost_model`` unless an explicit multi-model
+    ``workload`` is given) rather than constants folded into the three
+    legacy fields: per-degree slot padding is each degree's own measured
+    std-dev, and a mixed spec serves several model profiles from one
+    engine.  The default profile's numbers are mirrored into the legacy
+    scalar fields for direct readers."""
+    spec = workload if workload is not None else WorkloadSpec.from_cost_model(
+        cost, lp_tokens=lp_tokens, name="serve")
+    prof = spec.profile()
+    degs = prof.core_options
     return NetworkConfig(
         throughput_bps=link_gbps * 1e9 / 8,
         jitter_pad_s=1e-4,
-        t_hp=cost.hp_exec_time(),
-        t_lp_2core=cost.lp_exec_time(2, lp_tokens),
-        t_lp_4core=cost.lp_exec_time(4, lp_tokens),
-        hp_pad_s=cost.prefill[1].std_s,
-        lp_pad_s=cost.decode[2].std_s * lp_tokens,
+        t_hp=prof.hp_exec,
+        t_lp_2core=prof.lp_exec.get(2, prof.lp_exec[degs[0]]),
+        t_lp_4core=prof.lp_exec.get(4, prof.lp_exec[degs[-1]]),
+        hp_pad_s=prof.hp_pad,
+        lp_pad_s=prof.lp_pad[degs[0]],
         t_object_detect=0.0,
-        frame_period=max(cost.lp_exec_time(2, lp_tokens) * 1.1, 1e-3),
-        hp_deadline_slack=cost.hp_exec_time() * 0.5,
+        frame_period=max(prof.lp_exec[degs[0]] * 1.1, 1e-3),
+        hp_deadline_slack=prof.hp_deadline_slack,
+        workload=spec,
     )
 
 
@@ -76,6 +92,9 @@ class ServeRequest:                       # a jax array (dataclass __eq__
     priority: Priority
     deadline: float                      # virtual-time deadline
     home_slice: int
+    # Workload-profile key (core/profiles.py): which model profile sizes
+    # this request's slots.  None = the engine workload's default profile.
+    task_type: Optional[str] = None
     arrival: float = 0.0
     rid: int = field(default_factory=lambda: next(_rid))
     # results
@@ -205,7 +224,8 @@ class PreemptiveServingEngine:
         self.metrics.lp_requests_total += 1
         lp = LowPriorityRequest(
             source_device=req.home_slice, deadline=req.deadline,
-            frame_id=req.rid, n_tasks=1, created_at=now)
+            frame_id=req.rid, n_tasks=1, task_type=req.task_type,
+            created_at=now)
         lp.make_tasks()
         task = lp.tasks[0]
         self._by_task[task] = req
@@ -221,7 +241,8 @@ class PreemptiveServingEngine:
         now = self.q.now
         if req.priority == Priority.HIGH:
             task = Task(priority=req.priority, source_device=req.home_slice,
-                        deadline=req.deadline, frame_id=req.rid)
+                        deadline=req.deadline, frame_id=req.rid,
+                        task_type=req.task_type)
             req.task = task
             self._by_task[task] = req
             self.metrics.hp_generated += 1

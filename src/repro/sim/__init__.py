@@ -1,6 +1,8 @@
 from .events import EventQueue
-from .traces import TraceConfig, generate_trace, potential_counts
-from .experiment import ScenarioConfig, run_scenario, SCENARIOS
+from .traces import TraceConfig, generate_trace, generate_type_trace, \
+    potential_counts
+from .experiment import MIXED_SCENARIOS, ScenarioConfig, run_scenario, \
+    SCENARIOS
 from .scenarios import (
     LargeNConfig,
     generate_arrivals,
@@ -13,7 +15,9 @@ __all__ = [
     "EventQueue",
     "TraceConfig",
     "generate_trace",
+    "generate_type_trace",
     "potential_counts",
+    "MIXED_SCENARIOS",
     "ScenarioConfig",
     "run_scenario",
     "SCENARIOS",

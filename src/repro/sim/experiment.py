@@ -14,9 +14,10 @@ from dataclasses import dataclass
 from typing import Optional
 
 from ..core.metrics import Metrics
-from ..core.network import NetworkConfig
+from ..core.network import NetworkConfig, resolve_network
 from ..core.policy import DispatchClient, PolicyDispatcher, create_policy, \
     registered_policies
+from ..core.profiles import PAPER_TYPE, validate_workload_name
 from ..core.scheduler import VICTIM_POLICIES
 from ..core.task import (
     Frame,
@@ -28,7 +29,7 @@ from ..core.task import (
 )
 from .events import EventQueue
 from .traces import TRACE_FAMILIES, TraceConfig, generate_trace, \
-    validate_trace_name
+    generate_type_trace, validate_trace_name
 
 
 @dataclass(frozen=True)
@@ -50,6 +51,10 @@ class ScenarioConfig:
     # arriving within this window are admitted through ONE batch sweep
     # (`decide_lp_batch`).  0 = the paper's per-request path.
     lp_batch_window: float = 0.0
+    # Workload spec name (core/profiles.py registry, DESIGN.md §10):
+    # "paper" is the seed's single-model pipeline; "mixed_edge" interleaves
+    # three model profiles with distinct benchmarks and deadlines.
+    workload: str = PAPER_TYPE
 
     def __post_init__(self) -> None:
         if self.algorithm not in registered_policies():
@@ -58,6 +63,7 @@ class ScenarioConfig:
                 + ", ".join(registered_policies())
             )
         validate_trace_name(self.trace)
+        validate_workload_name(self.workload)
         if self.victim_policy not in VICTIM_POLICIES:
             raise ValueError(
                 f"unknown victim_policy {self.victim_policy!r}; expected one "
@@ -87,6 +93,20 @@ SCENARIOS: dict[str, ScenarioConfig] = {
                                 victim_policy="weakest_set"),
 }
 
+# Beyond-paper: heterogeneous fleets (core/profiles.py "mixed_edge" — the
+# paper's model interleaved with a light mobile classifier and a heavy
+# detection transformer, each with its own benchmark table, transfer sizes
+# and LP deadline).  Kept out of ``SCENARIOS`` so the paper's Table-1 set
+# stays exactly the published legend; golden-replayed all the same.
+MIXED_SCENARIOS: dict[str, ScenarioConfig] = {
+    "MPS": ScenarioConfig("MPS", "uniform", "scheduler", True,
+                          workload="mixed_edge"),
+    "MNPS": ScenarioConfig("MNPS", "uniform", "scheduler", False,
+                           workload="mixed_edge"),
+    "MPS_W4": ScenarioConfig("MPS_W4", "weighted_4", "scheduler", True,
+                             workload="mixed_edge"),
+}
+
 
 class _SimClient(DispatchClient):
     """Dispatcher hooks for the discrete-event sim (noise model, frames)."""
@@ -108,7 +128,9 @@ class Runtime:
 
     def __init__(self, cfg: ScenarioConfig, net: Optional[NetworkConfig] = None):
         self.cfg = cfg
-        self.net = net or NetworkConfig()
+        # An explicit net wins but must cover the workload's task types
+        # (resolve_network raises early on a mismatch).
+        self.net = resolve_network(net, cfg.workload)
         self.q = EventQueue()
         self.metrics = Metrics(cfg.name)
         self.rng = random.Random(cfg.seed * 7919 + 17)
@@ -135,11 +157,12 @@ class Runtime:
 
     # -- execution-time noise + contention model -------------------------- #
     def exec_time(self, task: Task, busy_frac: float = 0.0) -> float:
+        prof = self.net.profile(task.task_type)
         if task.priority == Priority.HIGH:
-            base, sigma, coef = self.net.t_hp, self.cfg.hp_noise_sigma, \
+            base, sigma, coef = prof.hp_exec, self.cfg.hp_noise_sigma, \
                 self.net.hp_contention_coef
         else:
-            base, sigma, coef = self.net.lp_proc_time(task.cores), \
+            base, sigma, coef = prof.lp_proc_time(task.cores), \
                 self.cfg.lp_noise_sigma, self.net.lp_contention_coef
         t = base * (1.0 + coef * busy_frac)
         if self.cfg.exec_noise:
@@ -149,10 +172,16 @@ class Runtime:
     # -- frame pipeline -------------------------------------------------- #
     def run(self) -> Metrics:
         reset_id_counters()
-        trace = generate_trace(
-            TraceConfig(self.cfg.trace, self.cfg.n_frames, self.cfg.n_devices,
-                        self.cfg.seed)
-        )
+        trace_cfg = TraceConfig(self.cfg.trace, self.cfg.n_frames,
+                                self.cfg.n_devices, self.cfg.seed)
+        trace = generate_trace(trace_cfg)
+        # Mixed workloads: an independent, equally deterministic draw assigns
+        # each device-frame its task type (single-profile specs skip the
+        # draw entirely, so the paper scenarios' random streams are
+        # untouched).
+        spec = self.net.spec
+        types = (generate_type_trace(trace_cfg, spec.mix_weights())
+                 if spec.is_mixed else None)
         period = self.net.frame_period
         # Hosts start as staggered pairs (paper §3) with random per-device offset.
         offsets = [
@@ -163,13 +192,22 @@ class Runtime:
         for k in range(self.cfg.n_frames):
             for d in range(self.cfg.n_devices):
                 t = offsets[d] + k * period
-                self._spawn_frame(t, d, int(trace[k, d]), fid)
+                self._spawn_frame(t, d, int(trace[k, d]), fid,
+                                  None if types is None else str(types[k, d]))
                 fid += 1
         self.q.run()
         return self._finalize()
 
-    def _spawn_frame(self, t: float, device: int, value: int, fid: int) -> None:
-        frame = Frame(device, t, value, fid, deadline=t + self.net.frame_period)
+    def _spawn_frame(self, t: float, device: int, value: int, fid: int,
+                     task_type: Optional[str] = None) -> None:
+        # Per-type LP deadline (a mixed workload's profiles carry their own
+        # relative deadlines); the paper profile falls back to the frame
+        # period, exactly the seed behaviour.
+        prof = self.net.profile(task_type)
+        rel_deadline = (prof.lp_deadline if prof.lp_deadline is not None
+                        else self.net.frame_period)
+        frame = Frame(device, t, value, fid, deadline=t + rel_deadline,
+                      task_type=task_type)
         self.frames.append(frame)
 
         def gen() -> None:
@@ -188,8 +226,9 @@ class Runtime:
         task = Task(
             priority=Priority.HIGH,
             source_device=frame.device,
-            deadline=self.net.hp_deadline(now),
+            deadline=self.net.hp_deadline(now, frame.task_type),
             frame_id=frame.frame_id,
+            task_type=frame.task_type,
             created_at=now,
         )
         frame.hp_task = task
@@ -203,6 +242,7 @@ class Runtime:
             deadline=frame.deadline,
             frame_id=frame.frame_id,
             n_tasks=frame.trace_value,
+            task_type=frame.task_type,
             created_at=self.q.now,
         )
         req.make_tasks()

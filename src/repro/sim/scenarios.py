@@ -41,7 +41,8 @@ import numpy as np
 
 from ..core.calendar import NetworkState
 from ..core.metrics import Metrics
-from ..core.network import NetworkConfig
+from ..core.network import NetworkConfig, resolve_network
+from ..core.profiles import PAPER_TYPE, get_workload, validate_workload_name
 from ..core.scheduler import PreemptionAwareScheduler
 from ..core.task import LowPriorityRequest, Priority, Task, reset_id_counters
 
@@ -55,6 +56,7 @@ class Arrival:
     t: float
     device: int
     n_lp_tasks: int          # 0 = HP only; >0 = HP followed by an LP set
+    task_type: Optional[str] = None    # workload-profile key (mixed fleets)
 
 
 @dataclass(frozen=True)
@@ -81,10 +83,15 @@ class LargeNConfig:
     idle_len: float = 30.0                   # bursty: idle phase length (s)
     wave_period: float = 8.0                 # adversarial: seconds between waves
     seed: int = 0
+    # Workload spec name (core/profiles.py): "paper" = the single-model
+    # seed workload; "mixed_edge" interleaves three model profiles with
+    # their own benchmark tables, transfer sizes and LP deadlines.
+    workload: str = PAPER_TYPE
 
     def __post_init__(self) -> None:
         if self.arrival not in ARRIVAL_KINDS:
             raise ValueError(f"unknown arrival family: {self.arrival}")
+        validate_workload_name(self.workload)
 
 
 def sweep_devices(
@@ -107,13 +114,14 @@ def sweep_mix(
 def generate_arrivals(cfg: LargeNConfig) -> list[Arrival]:
     """Deterministic (seeded) arrival stream, sorted by time."""
     rng = np.random.default_rng(cfg.seed * 9973 + cfg.n_devices)
+    pick_type = _type_picker(cfg)
     out: list[Arrival] = []
     if cfg.arrival == "adversarial":
         n_waves = max(1, int(cfg.duration / cfg.wave_period))
         for w in range(n_waves):
             t = w * cfg.wave_period
             for d in range(cfg.n_devices):
-                out.append(Arrival(t, d, _lp_size(cfg, rng)))
+                out.append(Arrival(t, d, _lp_size(cfg, rng), pick_type()))
         return out
 
     for d in range(cfg.n_devices):
@@ -127,9 +135,24 @@ def generate_arrivals(cfg: LargeNConfig) -> list[Arrival]:
             t += float(rng.exponential(1.0 / max(rate, 1e-9)))
             if t >= cfg.duration:
                 break
-            out.append(Arrival(t, d, _lp_size(cfg, rng)))
+            out.append(Arrival(t, d, _lp_size(cfg, rng), pick_type()))
     out.sort(key=lambda a: (a.t, a.device))
     return out
+
+
+def _type_picker(cfg: LargeNConfig):
+    """Per-arrival task-type draw for mixed workloads.  Single-profile
+    specs return a constant None picker WITHOUT consuming randomness, so
+    the paper-workload arrival streams are bit-identical to before; mixed
+    specs draw from a dedicated rng (never the arrival-time rng)."""
+    spec = get_workload(cfg.workload)
+    if not spec.is_mixed:
+        return lambda: None
+    weights = spec.mix_weights()
+    names = [t for t, _ in weights]
+    p = np.asarray([w for _, w in weights])
+    trng = np.random.default_rng(cfg.seed * 7907 + cfg.n_devices + 1)
+    return lambda: str(names[int(trng.choice(len(names), p=p))])
 
 
 def _lp_size(cfg: LargeNConfig, rng: np.random.Generator) -> int:
@@ -157,7 +180,9 @@ def run_large_n(
     Returns a summary dict with admission counts and wall-clock admission
     latency statistics (microseconds per call).
     """
-    net = net or NetworkConfig()
+    # An explicit net wins but must cover the workload's task types
+    # (resolve_network raises early on a mismatch).
+    net = resolve_network(net, cfg.workload)
     reset_id_counters()
     st = state if state is not None else NetworkState(cfg.n_devices)
     metrics = Metrics(cfg.name)
@@ -193,8 +218,8 @@ def run_large_n(
         if kind == HP:
             a = payload
             hp = Task(priority=Priority.HIGH, source_device=a.device,
-                      deadline=net.hp_deadline(now), frame_id=0,
-                      created_at=now)
+                      deadline=net.hp_deadline(now, a.task_type), frame_id=0,
+                      task_type=a.task_type, created_at=now)
             if sched.allocate_high_priority(hp, now).success:
                 hp_ok += 1
             else:
@@ -204,9 +229,15 @@ def run_large_n(
                 seq += 1
         elif kind == LP:
             a = payload
+            # Per-type relative deadline when the profile declares one
+            # (mixed fleets), else the scenario-wide lp_deadline.
+            prof = net.profile(a.task_type)
+            rel_dl = (prof.lp_deadline if prof.lp_deadline is not None
+                      else cfg.lp_deadline)
             req = LowPriorityRequest(source_device=a.device,
-                                     deadline=now + cfg.lp_deadline,
+                                     deadline=now + rel_dl,
                                      frame_id=0, n_tasks=a.n_lp_tasks,
+                                     task_type=a.task_type,
                                      created_at=now)
             req.make_tasks()
             if batch_window > 0.0:

@@ -106,6 +106,27 @@ def generate_trace(cfg: TraceConfig) -> np.ndarray:
     return np.asarray(VALUES, dtype=np.int64)[idx]
 
 
+def generate_type_trace(cfg: TraceConfig, weights) -> np.ndarray:
+    """Task-type assignment for a mixed workload: an object array of shape
+    [n_frames, n_devices] of task-type names drawn from ``weights``
+    ((type, probability) pairs — ``WorkloadSpec.mix_weights()``).
+
+    Seeded independently of :func:`generate_trace` (distinct salt), so a
+    workload's type stream never perturbs the value stream: the same
+    (trace, seed) pair generates identical frame values whether the
+    scenario runs the paper's single model or a mixed fleet.
+    """
+    types = [t for t, _ in weights]
+    p = np.asarray([w for _, w in weights], dtype=float)
+    if len(types) == 0 or p.sum() <= 0:
+        raise ValueError("generate_type_trace: empty or zero-weight mix")
+    p /= p.sum()
+    name_salt = zlib.crc32(("types:" + cfg.name).encode()) % (2 ** 16)
+    rng = np.random.default_rng(cfg.seed + name_salt)
+    idx = rng.choice(len(types), size=(cfg.n_frames, cfg.n_devices), p=p)
+    return np.asarray(types, dtype=object)[idx]
+
+
 def potential_counts(trace: np.ndarray) -> dict[str, int]:
     """Reproduce Table 4: potential HP/LP task counts for a trace."""
     return {

@@ -1,0 +1,105 @@
+"""Static lint over the Pallas kernel sources: no bare-int ``pl.load``
+indices.
+
+This JAX version's interpret-mode discharge rule for ``pl.load`` rejects a
+bare Python int inside the index tuple (``'int' object has no attribute
+'shape'``) — the bug that broke all 18 flash-attention sweeps until the
+index was rewritten as ``pl.ds(0, 1)`` + squeeze.  The grep below fails any
+kernel that reintroduces the pattern, so the class cannot regress silently.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+KERNELS_DIR = Path(__file__).parent.parent / "src" / "repro" / "kernels"
+
+def _kernel_sources() -> list[Path]:
+    return sorted(KERNELS_DIR.rglob("*.py"))
+
+
+def test_kernel_sources_exist():
+    assert _kernel_sources(), f"no kernel sources under {KERNELS_DIR}"
+
+
+@pytest.mark.parametrize("path", _kernel_sources(),
+                         ids=lambda p: str(p.relative_to(KERNELS_DIR)))
+def test_no_bare_int_pl_load_indices(path):
+    src = path.read_text()
+    # Normalise whitespace so a call split across lines is still one match
+    # target, then scan every pl.load/pl.store call's index tuple.
+    flat = re.sub(r"\s+", " ", src)
+    for m in re.finditer(r"pl\.(?:load|store|swap)\(", flat):
+        # Walk the balanced parens of this call.
+        depth, i = 0, m.end() - 1
+        start = i
+        while i < len(flat):
+            if flat[i] == "(":
+                depth += 1
+            elif flat[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            i += 1
+        call = flat[start:i + 1]
+        # Index tuple = the second top-level argument; none of its TOP-LEVEL
+        # elements may be a bare int literal (ints inside pl.ds(0, 1) or
+        # arithmetic like s * bk are fine — only a naked integer element
+        # trips the interpret-mode discharge rule).
+        bare = [e for e in _tuple_elements(_index_tuple(call))
+                if re.fullmatch(r"-?\d+", e.strip())]
+        assert not bare, (
+            f"{path}: bare Python int {bare} inside a pl.load/pl.store index "
+            f"tuple (use pl.ds(i, 1) + squeeze instead): {call!r}"
+        )
+
+
+def _index_tuple(call: str) -> str:
+    """Extract the second top-level argument (the index tuple) of a
+    ``pl.load(ref, (...))``-shaped call; '' when there is none."""
+    depth = 0
+    args_start = call.index("(") + 1
+    second = ""
+    arg_idx = 0
+    i = args_start
+    begin = i
+    while i < len(call):
+        c = call[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            if depth == 0:
+                if arg_idx == 1:
+                    second = call[begin:i]
+                break
+            depth -= 1
+        elif c == "," and depth == 0:
+            if arg_idx == 1:
+                second = call[begin:i]
+                break
+            arg_idx += 1
+            begin = i + 1
+        i += 1
+    return second
+
+
+def _tuple_elements(tup: str) -> list[str]:
+    """Split a ``(a, b, c)``-shaped source fragment into its top-level
+    elements; a non-tuple fragment is returned as a single element."""
+    tup = tup.strip()
+    if not (tup.startswith("(") and tup.endswith(")")):
+        return [tup] if tup else []
+    inner = tup[1:-1]
+    out, depth, begin = [], 0, 0
+    for i, c in enumerate(inner):
+        if c in "([{":
+            depth += 1
+        elif c in ")]}":
+            depth -= 1
+        elif c == "," and depth == 0:
+            out.append(inner[begin:i])
+            begin = i + 1
+    tail = inner[begin:]
+    if tail.strip():
+        out.append(tail)
+    return out

@@ -59,11 +59,6 @@ def test_halo_conv_tiling_invariance():
 # --------------------------------------------------------------------------- #
 
 
-# All 18 parameterisations fail under jax[cpu] Pallas interpret mode
-# (pre-existing since the seed; tracked in CHANGES.md).  The marker lets CI
-# deselect exactly these so a green tier-1 run actually means green, while
-# a non-blocking watch job notices if they ever start passing.
-@pytest.mark.kernel_known_fail
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("t,d,bq,bk", [
     (128, 64, 64, 64),

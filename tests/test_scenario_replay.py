@@ -19,8 +19,15 @@ import pytest
 
 from repro.core.policy import registered_policies
 from repro.sim import SCENARIOS, ScenarioConfig, run_scenario
+from repro.sim.experiment import MIXED_SCENARIOS
 
 GOLDEN = Path(__file__).parent / "data" / "golden_scenarios.json"
+
+#: Every golden-replayed scenario: the paper's Table-1 set (captured from
+#: the pre-refactor backends) plus the heterogeneous-workload set (captured
+#: when the workload-profile layer landed; the paper set must stay
+#: bit-identical across BOTH refactors).
+ALL_GOLDEN_SCENARIOS = {**SCENARIOS, **MIXED_SCENARIOS}
 
 
 def _summary(metrics) -> dict:
@@ -34,7 +41,7 @@ def regen() -> None:
     n = data["n_frames"]
     data["summaries"] = {
         name: _summary(run_scenario(replace(cfg, n_frames=n)))
-        for name, cfg in SCENARIOS.items()
+        for name, cfg in ALL_GOLDEN_SCENARIOS.items()
     }
     GOLDEN.write_text(json.dumps(data, indent=1, sort_keys=True))
 
@@ -44,9 +51,9 @@ def golden():
     return json.loads(GOLDEN.read_text())
 
 
-@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.parametrize("name", sorted(ALL_GOLDEN_SCENARIOS))
 def test_scenario_replay_matches_pre_refactor_golden(name, golden):
-    cfg = replace(SCENARIOS[name], n_frames=golden["n_frames"])
+    cfg = replace(ALL_GOLDEN_SCENARIOS[name], n_frames=golden["n_frames"])
     assert _summary(run_scenario(cfg)) == golden["summaries"][name]
 
 

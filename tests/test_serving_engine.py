@@ -39,6 +39,24 @@ def _prompt(cfg, seed=1):
                               cfg.vocab_size)
 
 
+def test_engine_network_config_carries_workload_spec(setup):
+    """The timing model is a real WorkloadSpec built from the cost model
+    (DESIGN.md §10), not constants folded into the three legacy fields —
+    and per-degree slot padding uses each degree's OWN measured std-dev."""
+    cfg, params, cost = setup
+    net = engine_network_config(cost, 10)
+    prof = net.profile()
+    assert prof.name == "serve"
+    assert prof.lp_exec[2] == pytest.approx(0.2)
+    assert prof.lp_exec[4] == pytest.approx(0.14)
+    assert prof.lp_pad[2] == pytest.approx(0.02)
+    assert prof.lp_pad[4] == pytest.approx(0.014)   # not degree 2's 0.02
+    # legacy scalar mirrors stay consistent for direct readers
+    assert net.t_hp == prof.hp_exec
+    assert net.t_lp_2core == prof.lp_exec[2]
+    assert net.t_lp_4core == prof.lp_exec[4]
+
+
 def test_hp_request_completes_within_deadline(setup):
     cfg, params, cost = setup
     eng, net = _engine(cfg, params, cost)
