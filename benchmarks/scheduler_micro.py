@@ -15,12 +15,17 @@ measures — rather than asserts — what the skyline-calendar rewrite
                                   (``calendar_reference``) vs the skyline
                                   calendars; reports per-admission latency
                                   and the speedup ratio.
+* ``bench_probe_plane``         — the PR 4 acceptance ladder: skyline
+                                  admission latency at 64/256/1024 devices
+                                  over 5k in-flight tasks, against the
+                                  pinned PR 3 baselines.
 * ``bench_batch_admission``     — sequential per-request admission vs
                                   ``allocate_low_priority_batch`` over the
                                   same burst.
 * ``bench_large_n``             — the sim/scenarios.py suite end-to-end:
-                                  device ladder 4 -> 256, the three arrival
-                                  families, and an HP:LP mix sweep.
+                                  device ladder 4 -> 1024 (LARGE_N_TIERS),
+                                  the three arrival families, and an HP:LP
+                                  mix sweep.
 * ``bench_policy_sweep``        — every policy in the registry
                                   (core/policy.py) runs one reduced scenario;
                                   a registry entry that cannot complete it
@@ -28,14 +33,26 @@ measures — rather than asserts — what the skyline-calendar rewrite
 
 Run directly::
 
-    PYTHONPATH=src python benchmarks/scheduler_micro.py [--quick]
+    PYTHONPATH=src python benchmarks/scheduler_micro.py [--quick] [--json PATH]
 
 ``--quick`` shrinks the workloads for CI smoke use (a scheduler-latency
-regression still shows as a ratio, just with more noise).
+regression still shows as a ratio, just with more noise).  ``--json PATH``
+additionally writes the rows machine-readably (bench/config/metric/value
+plus capture metadata) — the file committed as ``BENCH_4.json`` is one such
+trajectory point, and CI uploads the per-run output as an artifact.
+
+``PR3_BASELINE_US`` pins the pre-probe-plane admission latencies (commit
+d91ade4) measured on the development container with this same benchmark;
+``*_speedup_vs_pr3_x`` rows divide them by the current run.  They are
+machine-specific reference points for the committed trajectory, NOT a CI
+gate — the CI perf smoke gates on the in-run reference-vs-skyline ratio,
+which is machine-independent.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
 
 from dataclasses import replace
@@ -47,9 +64,25 @@ from repro.core.policy import registered_policies
 from repro.core.scheduler import PreemptionAwareScheduler
 from repro.core.task import LowPriorityRequest, Priority, Task, reset_id_counters
 from repro.sim.experiment import MIXED_SCENARIOS, ScenarioConfig, run_scenario
-from repro.sim.scenarios import LargeNConfig, run_large_n, sweep_devices, sweep_mix
+from repro.sim.scenarios import (
+    LARGE_N_TIERS,
+    LargeNConfig,
+    run_large_n,
+    sweep_devices,
+    sweep_mix,
+)
 
 Row = tuple[str, str, str, float]
+
+#: Pre-probe-plane (PR 3, commit d91ade4) admission latencies, measured on
+#: the development container with this benchmark's own protocol (identical
+#: preload, warmed process, mean over the probe loop).  See module
+#: docstring for how these are used.
+PR3_BASELINE_US = {
+    "64dev_5000tasks": {"hp": 52.0, "lp": 221.5},
+    "256dev_5000tasks": {"hp": 224.8, "lp": 539.7},
+    "1024dev_5000tasks": {"hp": 413.8, "lp": 1854.1},
+}
 
 
 def _loaded_state(n_devices: int, n_tasks: int, net: NetworkConfig):
@@ -125,39 +158,49 @@ def _preload(state, n_tasks: int, horizon: float, seed: int = 7) -> None:
                            ("update", task.task_id))
 
 
-def _probe_admissions(state, net: NetworkConfig, probes: int) -> tuple[float, float]:
+def _probe_admissions(state, net: NetworkConfig, probes: int,
+                      warmup: int = 12) -> tuple[float, float]:
     """Mean per-call wall time (us) for HP and single-task-LP admission.
     Every successful probe is rolled back so all probes see the same state;
     only the admission call itself is timed (rollback cost differs between
-    the calendar implementations and is not admission latency)."""
+    the calendar implementations and is not admission latency).  A few
+    untimed warmup probes first-touch caches and deferred structures for
+    BOTH implementations, so the means measure steady-state latency."""
     sched = PreemptionAwareScheduler(state, net, preemption=False)
 
-    hp_t = 0.0
-    for i in range(probes):
-        task = Task(priority=Priority.HIGH, source_device=i % len(state.devices),
+    def _one_hp(i: int) -> float:
+        """One HP admission + rollback; returns the timed admission cost
+        (warmup discards it, so warmed and measured state stay identical)."""
+        task = Task(priority=Priority.HIGH,
+                    source_device=i % len(state.devices),
                     deadline=1e6, frame_id=i)
         t0 = time.perf_counter()
         res = sched.allocate_high_priority(task, 0.0)
-        hp_t += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
         if res.allocation is not None:
             state.devices[task.device].release(task)
             for slot in res.allocation.link_slots:
                 state.link.cancel(slot)
-    hp_us = hp_t / probes * 1e6
+        return dt
 
-    lp_t = 0.0
-    for i in range(probes):
+    def _one_lp(i: int) -> float:
         req = LowPriorityRequest(source_device=i % len(state.devices),
                                  deadline=120.0, frame_id=i, n_tasks=1)
         req.make_tasks()
         t0 = time.perf_counter()
         res = sched.allocate_low_priority(req, 0.0)
-        lp_t += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
         for alloc in res.allocations:
             state.devices[alloc.device].release(alloc.task)
             for slot in alloc.link_slots:
                 state.link.cancel(slot)
-    lp_us = lp_t / probes * 1e6
+        return dt
+
+    for i in range(warmup):
+        _one_hp(i)
+        _one_lp(i)
+    hp_us = sum(_one_hp(i) for i in range(probes)) / probes * 1e6
+    lp_us = sum(_one_lp(i) for i in range(probes)) / probes * 1e6
     return hp_us, lp_us
 
 
@@ -187,6 +230,38 @@ def bench_calendar_speedup(
     rows.append(("calendar_speedup", label, "new_lp_alloc_us", new_lp))
     rows.append(("calendar_speedup", label, "hp_speedup_x", ref_hp / max(new_hp, 1e-9)))
     rows.append(("calendar_speedup", label, "lp_speedup_x", ref_lp / max(new_lp, 1e-9)))
+    pr3 = PR3_BASELINE_US.get(label)
+    if pr3 is not None:
+        rows.append(("calendar_speedup", label, "hp_speedup_vs_pr3_x",
+                     pr3["hp"] / max(new_hp, 1e-9)))
+        rows.append(("calendar_speedup", label, "lp_speedup_vs_pr3_x",
+                     pr3["lp"] / max(new_lp, 1e-9)))
+    return rows
+
+
+def bench_probe_plane(probes: int = 60) -> list[Row]:
+    """The probe-plane acceptance ladder: skyline-calendar admission latency
+    at 64 / 256 / 1024 devices over the same 5k-task in-flight load (no
+    reference side — the seed calendars take minutes per probe at 1024
+    devices), compared against the pinned PR 3 numbers."""
+    net = NetworkConfig()
+    rows: list[Row] = []
+    for n_devices in (64, 256, 1024):
+        n_tasks = 5000
+        horizon = 250.0 * (64.0 / n_devices)
+        label = f"{n_devices}dev_{n_tasks}tasks"
+        reset_id_counters()
+        state = NetworkState(n_devices)
+        _preload(state, n_tasks, horizon)
+        hp, lp = _probe_admissions(state, net, probes)
+        rows.append(("probe_plane", label, "hp_alloc_us", hp))
+        rows.append(("probe_plane", label, "lp_alloc_us", lp))
+        pr3 = PR3_BASELINE_US.get(label)
+        if pr3 is not None:
+            rows.append(("probe_plane", label, "hp_speedup_vs_pr3_x",
+                         pr3["hp"] / max(hp, 1e-9)))
+            rows.append(("probe_plane", label, "lp_speedup_vs_pr3_x",
+                         pr3["lp"] / max(lp, 1e-9)))
     return rows
 
 
@@ -309,10 +384,12 @@ def bench_mixed_workload(n_frames: int = 60) -> list[Row]:
 def bench_large_n(quick: bool = False) -> list[Row]:
     rows: list[Row] = []
     dur = 20.0 if quick else 120.0
-    sizes = (16, 64, 256) if quick else (4, 16, 64, 256)
+    sizes = (16, 64, 256) if quick else LARGE_N_TIERS
 
     base = LargeNConfig(name="poisson", duration=dur)
     for cfg in sweep_devices(base, sizes):
+        if cfg.n_devices >= 1024:            # 1024-dev tier: shorter stream,
+            cfg = replace(cfg, duration=min(cfg.duration, 30.0))  # same rate
         s = run_large_n(cfg, batch_window=0.25)
         for k in ("hp_alloc_us_mean", "lp_alloc_us_mean", "lp_alloc_us_p99",
                   "hp_admitted", "lp_allocated", "preemptions", "wall_s"):
@@ -348,8 +425,14 @@ def bench_all(quick: bool = False) -> list[Row]:
     gc.collect()
     if quick:
         rows += bench_calendar_speedup(n_devices=16, n_tasks=1000, probes=15)
+        gc.collect()
+        rows += bench_probe_plane(probes=20)
     else:
         rows += bench_calendar_speedup()
+        gc.collect()
+        rows += bench_calendar_speedup(n_devices=256)
+        gc.collect()
+        rows += bench_probe_plane()
     gc.collect()
     rows += bench_batch_admission(16 if quick else 64, 60 if quick else 200)
     gc.collect()
@@ -361,12 +444,35 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized workloads (seconds instead of minutes)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as machine-readable JSON")
     args = ap.parse_args()
     t0 = time.time()
+    rows = bench_all(quick=args.quick)
     print("figure,scenario,metric,value")
-    for fig, scen, metric, value in bench_all(quick=args.quick):
+    for fig, scen, metric, value in rows:
         print(f"{fig},{scen},{metric},{value:.3f}")
-    print(f"# total scheduler_micro time: {time.time() - t0:.1f}s")
+    wall = time.time() - t0
+    print(f"# total scheduler_micro time: {wall:.1f}s")
+    if args.json:
+        doc = {
+            "meta": {
+                "benchmark": "scheduler_micro",
+                "quick": args.quick,
+                "python": platform.python_version(),
+                "machine": platform.machine(),
+                "total_wall_s": round(wall, 1),
+                "pr3_baseline_us": PR3_BASELINE_US,
+            },
+            "rows": [
+                {"bench": f, "config": c, "metric": m, "value": round(v, 3)}
+                for f, c, m, v in rows
+            ],
+        }
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {len(doc['rows'])} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -171,6 +171,13 @@ class ReferenceNetworkState:
             pts.update(dev.completion_times(after, before))
         return sorted(pts)
 
+    def iter_completion_times(self, after: float, before: float):
+        """Same sorted unique points as :meth:`completion_times` — eager
+        under the hood (the seed structures have no incremental merge), but
+        the iterator form lets the scheduler call one grid API for both
+        network-state implementations."""
+        return iter(self.completion_times(after, before))
+
     def total_allocated_tasks(self) -> int:
         return sum(len(d) for d in self.devices)
 

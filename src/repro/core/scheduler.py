@@ -42,6 +42,8 @@ import time as _time
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
+import numpy as np
+
 from .calendar import EPS, NetworkState, Reservation
 from .metrics import Metrics
 from .network import NetworkConfig
@@ -151,6 +153,21 @@ class PreemptionAwareScheduler:
         # link reservations per task, so preemption/reallocation can cancel
         # a task's still-pending xfer/update messages.
         self.links = LinkSlotRegistry()
+        # The vectorized network-wide probe plane (calendar.py): one pass
+        # answers fits/loads/earliest-fit for EVERY device.  The reference
+        # network state (calendar_reference.py) predates it, so the
+        # benchmarks can still drive this scheduler over the seed calendars
+        # through the per-device scalar path.
+        self._plane_ok = hasattr(state, "probe_plane")
+        # Probe accounting (tests/test_grid_dedup.py, DESIGN.md §11): how
+        # many per-task placement probes ran, how many time-point rounds the
+        # LP sweeps walked, and how much grid traffic the exact-duplicate
+        # dedup removed.  Plain counters — negligible overhead, always on.
+        self.lp_probes = 0
+        self.grid_rounds = 0
+        self.grid_pushes = 0
+        self.grid_dups_skipped = 0
+        self._dedup_grid = True
 
     # ------------------------------------------------------------------ #
     # High-priority algorithm                                            #
@@ -309,10 +326,15 @@ class PreemptionAwareScheduler:
 
         hints: dict[int, float] = {}
         ctx: dict = {}                        # shared placement memo (§4 scan)
+        # Explicit iteration so a satisfied request stops BEFORE pulling the
+        # next grid point — with the lazy grid, finishing at ``now`` (the
+        # common steady-state case) then never materialises the merge.
         time_points = self._time_point_grid(now, deadline)
-        for tp in time_points:
-            if not unallocated:
+        while unallocated:
+            tp = next(time_points, None)
+            if tp is None:
                 break
+            self.grid_rounds += 1
             round_hints: dict = {}            # per-profile, lazily per tp
             for task in list(unallocated):
                 hint = hints.get(task.task_id)
@@ -338,13 +360,24 @@ class PreemptionAwareScheduler:
 
     def _time_point_grid(self, now: float, deadline: float):
         """The §4 search grid: ``now`` followed by the network-wide
-        completion points up to the deadline — lazily when the calendars
-        support it (requests usually allocate within the first few points,
-        so the rest of the grid is never gathered)."""
-        lazy = getattr(self.state, "iter_completion_times", None)
-        if lazy is not None:
-            return itertools.chain([now], lazy(now, deadline))
-        return [now] + self.state.completion_times(now, deadline)
+        completion points up to the deadline — lazily (requests usually
+        allocate within the first few points, so the rest of the merge
+        never runs).  Exact duplicates are skipped: a repeated time-point
+        re-derives the identical link windows and placement answers, so
+        dropping it provably cannot change a decision (the counter and the
+        identical-decision proof live in tests/test_grid_dedup.py)."""
+        grid = itertools.chain([now],
+                               self.state.iter_completion_times(now, deadline))
+        return self._dedup(grid) if self._dedup_grid else grid
+
+    def _dedup(self, grid):
+        last = None
+        for tp in grid:
+            if last is not None and tp == last:
+                self.grid_dups_skipped += 1
+                continue
+            last = tp
+            yield tp
 
     def _refresh_ctx(self, ctx: dict, tp: float) -> dict:
         """(Re)derive the link-dependent placement windows for time-point
@@ -380,6 +413,19 @@ class PreemptionAwareScheduler:
                 xfer_dur=xfer_dur, xfer_t1=xfer_t1,
                 t1_off=xfer_t1 + xfer_dur, feasible=None)
         return sub
+
+    def _window_loads(self, ctx: dict, arrival: float,
+                      deadline: float) -> np.ndarray:
+        """Stacked per-device loads over [arrival, deadline) from the probe
+        plane, memoised in the placement context: within one time-point
+        nothing mutates between commits, so every candidate scan sharing the
+        window (same request deadline) reuses one vectorized pass."""
+        memo = ctx.setdefault("loads", {})
+        loads = memo.get(deadline)
+        if loads is None:
+            loads = memo[deadline] = \
+                self.state.probe_plane().loads(arrival, deadline)
+        return loads
 
     def _task_t1_off(self, ctx: dict, tp: float, task: Task) -> float:
         """The offloaded execution start a task would see at ``tp``."""
@@ -417,6 +463,11 @@ class PreemptionAwareScheduler:
             return None
         cores_min = prof.core_options[0]
         proc_min = prof.lp_slot_time(cores_min)
+        if self._plane_ok:
+            # One vectorized first-fit pass over every device (bit-identical
+            # to the per-device scalar min below).
+            plane = self.state.probe_plane()
+            return float(plane.earliest_fit(proc_min, tp, cores_min).min())
         return min(d.earliest_fit(proc_min, tp, cores_min) for d in devices)
 
     def _upgrade_pass(self, allocations, hints: dict[int, float]) -> list[float]:
@@ -495,10 +546,16 @@ class PreemptionAwareScheduler:
         if pending:
             pending.sort()
             max_dl = max(req.deadline for req in requests)
-            lazy = getattr(self.state, "iter_completion_times", None)
-            tp_heap = (list(lazy(now, max_dl)) if lazy is not None
-                       else self.state.completion_times(now, max_dl))
-            heapq.heapify(tp_heap)
+            # The network-wide grid, merged in one vectorized pass; a sorted
+            # unique list is already a valid min-heap, so no heapify.  The
+            # ``in_grid`` set keeps the heap duplicate-free: batch-created
+            # completion points (allocations, upgrades) that coincide with a
+            # point already in the grid would only pop into the existing
+            # ``cand <= tp`` skip, so dropping them at push time is provably
+            # decision-neutral (tests/test_grid_dedup.py).
+            tp_heap = self.state.completion_times(now, max_dl)
+            self.grid_pushes += len(tp_heap)
+            in_grid = set(tp_heap) if self._dedup_grid else None
             tp = now
             # Skip hints (see `_hint_start`): a task that failed a full scan
             # is skipped in O(1) at every time-point whose actual execution
@@ -507,7 +564,21 @@ class PreemptionAwareScheduler:
             # reservation, so it prunes the invalidated hints.
             hints: dict[int, float] = {}
             ctx: dict = {}                    # shared placement memo (§4 scan)
+            def push_tp(t_end: float) -> None:
+                """Feed a batch-created completion point into the grid,
+                skipping exact duplicates of points already queued."""
+                if not (tp + EPS < t_end < max_dl - EPS):
+                    return
+                if in_grid is not None:
+                    if t_end in in_grid:
+                        self.grid_dups_skipped += 1
+                        return
+                    in_grid.add(t_end)
+                self.grid_pushes += 1
+                heapq.heappush(tp_heap, t_end)
+
             while pending:
+                self.grid_rounds += 1
                 still: list[tuple[float, int, int, Task]] = []
                 progressed: set[int] = set()
                 round_hints: dict = {}        # per-profile, lazily per tp
@@ -532,15 +603,13 @@ class PreemptionAwareScheduler:
                     round_hints.clear()       # occupancy grew; recompute
                     results[ridx].allocations.append(alloc)
                     progressed.add(ridx)
-                    if tp + EPS < alloc.t_end < max_dl - EPS:
-                        heapq.heappush(tp_heap, alloc.t_end)
+                    push_tp(alloc.t_end)
                 for ridx in progressed:
                     for t_end in self._upgrade_pass(results[ridx].allocations,
                                                     hints):
                         # the upgrade moved this completion point earlier;
                         # the grid must contain the new one too
-                        if tp + EPS < t_end < max_dl - EPS:
-                            heapq.heappush(tp_heap, t_end)
+                        push_tp(t_end)
                 pending = still
                 if not pending:
                     break
@@ -637,6 +706,7 @@ class PreemptionAwareScheduler:
         if ctx is None:
             ctx = {}
         self._refresh_ctx(ctx, tp)
+        self.lp_probes += 1
         msg_t1, msg_dur = ctx["msg_t1"], ctx["msg_dur"]
         arrival = ctx["arrival"]
         if arrival + proc > deadline:
@@ -657,15 +727,34 @@ class PreemptionAwareScheduler:
             if sub["feasible"] is None:
                 # All offloaded candidates of one task type share the same
                 # transfer slot, hence the same execution window and
-                # feasibility scan.
-                sub["feasible"] = [
-                    d for d in self.state.devices if d.fits(t1, t1 + proc, cores)
-                ]
-            cands = [d for d in sub["feasible"] if d.device != source]
-            if not cands:
-                return None
-            # even spreading: least load over the deadline window
-            dev = min(cands, key=lambda d: (d.load(arrival, deadline), d.device))
+                # feasibility scan — one vectorized fits-mask over every
+                # device (per-device scalar loop only for the reference
+                # calendars, which predate the probe plane).
+                if self._plane_ok:
+                    plane = self.state.probe_plane()
+                    sub["feasible"] = np.flatnonzero(
+                        plane.fits_mask(t1, t1 + proc, cores))
+                else:
+                    sub["feasible"] = [d.device for d in self.state.devices
+                                       if d.fits(t1, t1 + proc, cores)]
+            # even spreading: least load over the deadline window; argmin
+            # over the stacked load vector returns the FIRST minimum, i.e.
+            # ties break toward the lowest device index — exactly the old
+            # (load, d.device) key.
+            if self._plane_ok:
+                feas = sub["feasible"]
+                cands = feas[feas != source]
+                if cands.size == 0:
+                    return None
+                loads = self._window_loads(ctx, arrival, deadline)
+                dev = self.state.devices[int(cands[np.argmin(loads[cands])])]
+            else:
+                cands = [self.state.devices[i] for i in sub["feasible"]
+                         if i != source]
+                if not cands:
+                    return None
+                dev = min(cands,
+                          key=lambda d: (d.load(arrival, deadline), d.device))
             offloaded = True
 
         # commit (mutates the link and a device calendar -> context dies)
@@ -686,7 +775,14 @@ class PreemptionAwareScheduler:
         return Allocation(task, dev.device, t1, t2, cores, offloaded, slots)
 
     def _try_upgrade(self, alloc: Allocation) -> bool:
-        """Improve an allocation by raising its core configuration (§4)."""
+        """Improve an allocation by raising its core configuration (§4).
+
+        Feasibility is probed with the task's own slot still in place: the
+        slot spans the whole candidate window (more cores = shorter slot)
+        and contributes exactly ``alloc.cores`` everywhere in it, so asking
+        for ``cores - alloc.cores`` MORE cores is bit-identical to the
+        release-then-probe formulation — without paying two calendar
+        mutations per failed attempt."""
         prof = self.net.profile(alloc.task.task_type)
         options = [c for c in prof.core_options if c > alloc.cores]
         if not options:
@@ -697,11 +793,10 @@ class PreemptionAwareScheduler:
             return False
         for cores in reversed(options):          # largest improvement first
             t2 = alloc.t_start + prof.lp_slot_time(cores)
-            dev.release(alloc.task)
-            if t2 <= alloc.task.deadline and dev.fits(alloc.t_start, t2, cores):
+            if t2 <= alloc.task.deadline and \
+                    dev.fits(alloc.t_start, t2, cores - res.amount):
                 dev.reserve(alloc.t_start, t2, cores, alloc.task)
                 alloc.cores, alloc.t_end = cores, t2
                 alloc.task.cores, alloc.task.t_end = cores, t2
                 return True
-            dev.reserve(res.t1, res.t2, res.amount, alloc.task)
         return False

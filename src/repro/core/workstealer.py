@@ -24,6 +24,8 @@ from __future__ import annotations
 from collections import deque
 from typing import Optional
 
+import numpy as np
+
 from .metrics import Metrics
 from .network import NetworkConfig
 from .policy import Decision, DecisionStatus, SchedulingPolicy, register_policy
@@ -90,6 +92,13 @@ class WorkstealingPolicy(SchedulingPolicy):
         self.global_queue: deque[Task] = deque()
         self._preempt_pending: set[Task] = set()
         self._polling: set[int] = set()
+        # Stacked committed-cores vector (the workstealer's probe plane):
+        # kept in sync by every demand/in-flight change so ``_kick_all``
+        # selects stealable devices with one vectorized compare instead of
+        # a per-device Python sweep.  A device filtered out here is exactly
+        # one whose ``_kick`` would be a no-op, so decisions are unchanged.
+        self._committed = np.zeros(n_devices, dtype=np.int64)
+        self._cap_arr = np.full(n_devices, capacity, dtype=np.int64)
 
     # -- processor-sharing core ------------------------------------------- #
     def _hp_penalty(self, dev: _WSDevice) -> float:
@@ -131,7 +140,8 @@ class WorkstealingPolicy(SchedulingPolicy):
         self._advance(dev)
         done = [t for t, r in dev.running.items() if r.work <= 1e-6]
         for task in done:
-            dev.running.pop(task)
+            run = dev.running.pop(task)
+            self._committed[dev.idx] -= run.cores
             self._complete(dev, task)
         self._kick(dev)
         self._kick_all()
@@ -156,6 +166,7 @@ class WorkstealingPolicy(SchedulingPolicy):
         if host.exec_noise:
             work = max(0.05, work + host.rng.gauss(0.0, sigma * cores))
         dev.running[task] = _Run(work, cores)
+        self._committed[dev.idx] += cores
         # The inference manager terminates tasks that overrun their deadline
         # (paper §7.3 task-violation messages) — partial work is wasted.
         if task.priority == Priority.LOW:
@@ -167,7 +178,8 @@ class WorkstealingPolicy(SchedulingPolicy):
         if task not in dev.running:
             return
         self._advance(dev)
-        dev.running.pop(task)
+        run = dev.running.pop(task)
+        self._committed[dev.idx] -= run.cores
         task.state = TaskState.FAILED
         if task in self._preempt_pending:
             self._preempt_pending.discard(task)
@@ -204,6 +216,7 @@ class WorkstealingPolicy(SchedulingPolicy):
     def _preempt(self, dev: _WSDevice, victim: Task) -> None:
         self._advance(dev)
         run = dev.running.pop(victim)
+        self._committed[dev.idx] -= run.cores
         victim.state = TaskState.PREEMPTED
         victim.preempt_count += 1
         m = self.metrics
@@ -229,8 +242,12 @@ class WorkstealingPolicy(SchedulingPolicy):
 
     # -- stealing ---------------------------------------------------------- #
     def _kick_all(self) -> None:
-        for dev in self.devices:
-            self._kick(dev)
+        # One vectorized pass over the committed-cores vector: only devices
+        # with at least two uncommitted cores can steal, and ``_kick`` is a
+        # complete no-op for every other device, so the filter is exact.
+        devices = self.devices
+        for i in np.flatnonzero(self._committed + 2 <= self._cap_arr):
+            self._kick(devices[int(i)])
 
     def _kick(self, dev: _WSDevice) -> None:
         host, m = self.host, self.metrics
@@ -261,9 +278,11 @@ class WorkstealingPolicy(SchedulingPolicy):
             host.lp_started(task, cores, dev.idx != task.source_device)
             if delay > 0:
                 dev.inflight += cores
+                self._committed[dev.idx] += cores
 
                 def arrive(d=dev, t=task, c=cores) -> None:
                     d.inflight -= c
+                    self._committed[d.idx] -= c
                     self._start(d, t, c)
 
                 host.q.push(host.q.now + delay, arrive)

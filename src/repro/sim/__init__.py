@@ -7,6 +7,7 @@ from .scenarios import (
     LargeNConfig,
     generate_arrivals,
     run_large_n,
+    LARGE_N_TIERS,
     sweep_devices,
     sweep_mix,
 )
@@ -24,6 +25,7 @@ __all__ = [
     "LargeNConfig",
     "generate_arrivals",
     "run_large_n",
+    "LARGE_N_TIERS",
     "sweep_devices",
     "sweep_mix",
 ]

@@ -48,6 +48,13 @@ from ..core.task import LowPriorityRequest, Priority, Task, reset_id_counters
 
 ARRIVAL_KINDS = ("poisson", "bursty", "adversarial")
 
+#: The standard device-count ladder.  The 1024 tier exists to exercise the
+#: vectorized probe plane (calendar.py) well past the paper's four devices —
+#: admission latency there is dominated by stacked NumPy passes, not by
+#: per-device Python loops, so the controller keeps up with a four-digit
+#: fleet (benchmarks/scheduler_micro.py reports the measured latencies).
+LARGE_N_TIERS = (4, 16, 64, 256, 1024)
+
 
 @dataclass(frozen=True)
 class Arrival:
@@ -95,9 +102,9 @@ class LargeNConfig:
 
 
 def sweep_devices(
-    base: LargeNConfig, sizes: Sequence[int] = (4, 16, 64, 256)
+    base: LargeNConfig, sizes: Sequence[int] = LARGE_N_TIERS
 ) -> list[LargeNConfig]:
-    """Device-count ladder with per-size names (4 -> 256 by default)."""
+    """Device-count ladder with per-size names (4 -> 1024 by default)."""
     return [replace(base, name=f"{base.name}_n{n}", n_devices=n) for n in sizes]
 
 

@@ -186,8 +186,8 @@ def test_skyline_coalesces_after_churn():
     for i in range(200):
         dev.release(i)
     assert dev.max_usage(0.0, 100.0) == 0
-    assert len(dev._sky.times) == 1            # fully coalesced to sentinel
-    assert dev._t2s == []
+    assert dev._sky.n == 1                     # fully coalesced to sentinel
+    assert len(dev._t2s) == 0
 
 
 def test_device_load_matches_manual_integral():

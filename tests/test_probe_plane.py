@@ -1,0 +1,159 @@
+"""Unit tests for the vectorized network-wide probe plane (calendar.py).
+
+The fuzz suite (test_skyline_fuzz.py) proves scalar/vector agreement on
+random states; this file pins the edge cases that make the plane correct:
+multi-segment runs in the first-fit search, lazy dirty-row refresh, mirror
+growth, the deep-window location shortcuts, and the per-cores blocked-count
+tables staying in sync across mutations.
+"""
+import numpy as np
+import pytest
+
+from repro.core.calendar import NetworkState
+
+
+def test_earliest_fit_spans_multi_segment_runs():
+    """A free run made of SEVERAL coalesced segments (usage 1 then 2, limit
+    2) must host a slot that no single segment could — the per-segment
+    formulation of first-fit would miss it."""
+    st = NetworkState(1)
+    dev = st.devices[0]
+    dev.reserve(0.0, 10.0, 1, "a")            # usage 1 on [0, 10)
+    dev.reserve(5.0, 10.0, 1, "b")            # usage 2 on [5, 10)
+    dev.reserve(10.0, 12.0, 4, "block")       # blocked [10, 12)
+    plane = st.probe_plane()
+    # 2 cores (limit 2): the run [0, 10) spans two segments (1 then 2)
+    assert float(plane.earliest_fit(9.0, 0.0, 2)[0]) == 0.0
+    assert dev.earliest_fit(9.0, 0.0, 2) == 0.0
+    # 3 cores (limit 1): only [0, 5) qualifies, too short for 9s
+    assert float(plane.earliest_fit(9.0, 0.0, 3)[0]) == 12.0
+    assert dev.earliest_fit(9.0, 0.0, 3) == 12.0
+    # ... but long enough for 4s
+    assert float(plane.earliest_fit(4.0, 0.0, 3)[0]) == 0.0
+
+
+def test_earliest_fit_infeasible_capacity_returns_inf():
+    """A device whose capacity can never host the request must answer +inf
+    exactly like the scalar first_fit guard — not the -inf sentinel."""
+    from repro.core.calendar import DeviceCalendar
+
+    st = NetworkState(2, devices=[DeviceCalendar(0, capacity=2),
+                                  DeviceCalendar(1, capacity=4)])
+    st.n_devices = 2
+    plane = st.probe_plane()
+    starts = plane.earliest_fit(1.0, 0.0, 3)
+    assert float(starts[0]) == float("inf")
+    assert float(starts[0]) == st.devices[0].earliest_fit(1.0, 0.0, 3)
+    assert float(starts[1]) == 0.0
+
+
+def test_refresh_tracks_mutations_lazily():
+    st = NetworkState(3)
+    plane = st.probe_plane()
+    assert plane.fits_mask(0.0, 5.0, 4).all()              # all free
+    st.devices[1].reserve(0.0, 5.0, 4, "x")
+    # the plane instance is stale until the next probe_plane() call
+    plane = st.probe_plane()
+    assert list(plane.fits_mask(0.0, 5.0, 1)) == [True, False, True]
+    st.devices[1].release("x")
+    plane = st.probe_plane()
+    assert list(plane.fits_mask(0.0, 5.0, 1)) == [True, True, True]
+
+
+def test_plane_growth_past_initial_width():
+    """More live segments than the initial mirror width forces a regrow of
+    every row; answers must be unaffected."""
+    st = NetworkState(2)
+    dev = st.devices[0]
+    for i in range(40):                        # disjoint slots: 80+ segments
+        dev.reserve(2.0 * i, 2.0 * i + 1.0, 1, i)
+    plane = st.probe_plane()
+    assert plane._w >= 40
+    assert bool(plane.fits_mask(0.0, 1.0, 4)[0]) is False
+    assert bool(plane.fits_mask(1.0, 2.0, 4)[0]) is True
+    assert float(plane.loads(0.0, 80.0)[0]) == pytest.approx(40.0)
+    assert float(plane.loads(0.0, 80.0)[1]) == 0.0
+
+
+def test_location_shortcut_beyond_horizon():
+    """Windows ending past every breakpoint take the O(1) tmax shortcut and
+    must still agree with the scalar answers."""
+    st = NetworkState(2)
+    st.devices[0].reserve(0.0, 10.0, 2, "a")
+    st.devices[1].reserve(3.0, 7.0, 4, "b")
+    plane = st.probe_plane()
+    deadline = 1e6                             # far beyond tmax
+    loads = plane.loads(0.0, deadline)
+    assert float(loads[0]) == pytest.approx(st.devices[0].load(0.0, deadline))
+    assert float(loads[1]) == pytest.approx(st.devices[1].load(0.0, deadline))
+    assert list(plane.fits_mask(0.0, deadline, 1)) == [
+        st.devices[0].fits(0.0, deadline, 1),
+        st.devices[1].fits(0.0, deadline, 1),
+    ]
+
+
+def test_location_escalates_past_saturated_front():
+    """A row with more than 16 breakpoints before the window end saturates
+    the front-slice count and must escalate exactly."""
+    st = NetworkState(2)
+    dev = st.devices[0]
+    for i in range(30):
+        dev.reserve(i * 1.0, i * 1.0 + 0.5, 1, i)   # 60 breakpoints
+    dev.reserve(50.0, 60.0, 4, "tail")
+    st.devices[1].reserve(49.0, 62.0, 2, "other")
+    plane = st.probe_plane()
+    # window end (55) lies deep past >16 breakpoints of row 0
+    assert list(plane.fits_mask(48.0, 55.0, 1)) == [
+        st.devices[0].fits(48.0, 55.0, 1),
+        st.devices[1].fits(48.0, 55.0, 1),
+    ]
+    assert float(plane.loads(48.0, 55.0)[0]) == pytest.approx(
+        st.devices[0].load(48.0, 55.0))
+
+
+def test_blocked_count_tables_follow_mutations():
+    st = NetworkState(2)
+    plane = st.probe_plane()
+    assert plane.fits_mask(0.0, 5.0, 2).all()          # builds the table
+    st.devices[0].reserve(0.0, 5.0, 4, "x")            # dirty row 0
+    plane = st.probe_plane()                           # row-wise bc update
+    assert list(plane.fits_mask(0.0, 5.0, 2)) == [False, True]
+    st.devices[0].truncate("x", 2.0)
+    plane = st.probe_plane()
+    assert list(plane.fits_mask(2.0, 5.0, 2)) == [True, True]
+    assert list(plane.fits_mask(0.0, 5.0, 2)) == [False, True]
+
+
+def test_probe_window_snapshot():
+    st = NetworkState(2)
+    st.devices[0].reserve(0.0, 4.0, 3, "a")
+    win = st.probe_plane(0.0, 4.0)
+    assert list(win.free_cores) == [1, 4]
+    assert list(win.fits(2)) == [False, True]
+    assert float(win.loads[0]) == pytest.approx(12.0)
+    assert win.t1 == 0.0 and win.t2 == 4.0
+
+
+def test_empty_window_semantics():
+    st = NetworkState(2)
+    st.devices[0].reserve(0.0, 4.0, 4, "a")
+    plane = st.probe_plane()
+    # empty/inverted windows fit everything, load nothing (scalar parity)
+    assert plane.fits_mask(2.0, 2.0, 4).all()
+    assert (plane.loads(3.0, 3.0) == 0.0).all()
+    assert (plane.free_cores(2.0, 2.0) == np.array([4, 4])).all()
+
+
+def test_completion_array_matches_completion_times():
+    st = NetworkState(3)
+    st.devices[0].reserve(0.0, 5.0, 1, "a")
+    st.devices[1].reserve(1.0, 5.0, 1, "b")    # duplicate point 5.0
+    st.devices[2].reserve(2.0, 7.0, 1, "c")
+    plane = st.probe_plane()
+    assert plane.completion_array(0.0, 10.0).tolist() == [5.0, 7.0]
+    assert st.completion_times(0.0, 10.0) == [5.0, 7.0]
+    assert list(st.iter_completion_times(0.0, 10.0)) == [5.0, 7.0]
+    # the lazy grid is a call-time snapshot: later commits don't perturb it
+    it = st.iter_completion_times(0.0, 10.0)
+    st.devices[0].reserve(3.0, 6.0, 1, "late")
+    assert list(it) == [5.0, 7.0]

@@ -3,6 +3,7 @@ import pytest
 
 from repro.core.calendar_reference import ReferenceNetworkState
 from repro.sim.scenarios import (
+    LARGE_N_TIERS,
     LargeNConfig,
     generate_arrivals,
     run_large_n,
@@ -77,6 +78,20 @@ def test_run_large_n_256_devices_mixed_end_to_end():
     assert s["hp_admitted"] > 0
     assert s["lp_allocated"] > 0
     assert s["wall_s"] < 60.0
+
+
+def test_run_large_n_1024_devices_completes():
+    """The new LARGE_N tier: a four-digit fleet through the vectorized probe
+    plane — short stream, but every admission path (HP, preemption, batched
+    LP) is exercised at 1024 devices."""
+    assert 1024 in LARGE_N_TIERS
+    cfg = LargeNConfig(name="huge", n_devices=1024, duration=4.0,
+                       lp_fraction=0.6, seed=0)
+    s = run_large_n(cfg, batch_window=0.25)
+    assert s["n_devices"] == 1024
+    assert s["hp_admitted"] > 0
+    assert s["lp_allocated"] > 0
+    assert s["wall_s"] < 120.0
 
 
 def test_run_large_n_batch_matches_request_level_totals():

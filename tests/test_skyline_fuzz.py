@@ -1,0 +1,297 @@
+"""Seeded fuzz differential suite for the array-backed skyline calendars.
+
+Random ``add`` / ``reserve`` / ``cancel`` / ``truncate`` / ``gc`` / query
+sequences are driven through the NumPy gap-buffer skyline and, side by
+side, through an independent oracle — the frozen seed implementation
+(``calendar_reference``) where one exists, or a brute-force interval sweep
+re-implementing the pre-rewrite walk semantics for the queries the seed
+never had (``first_fit``).  Answers must match at EVERY step, so a single
+bad splice in the mutation log, gap shifting, coalescing or prefix-sum
+bookkeeping fails loudly with the seed that reproduces it.
+
+No hypothesis dependency: plain seeded ``random`` sweeps, deterministic
+corpus (the container image does not ship hypothesis).
+"""
+import math
+import random
+
+import pytest
+
+from repro.core.calendar import (
+    EPS,
+    DeviceCalendar,
+    LinkCalendar,
+    NetworkState,
+    _StepFn,
+)
+from repro.core.calendar_reference import (
+    ReferenceDeviceCalendar,
+    ReferenceLinkCalendar,
+)
+
+_INF = math.inf
+
+
+# --------------------------------------------------------------------- #
+# Brute-force oracle for the raw step function                          #
+# --------------------------------------------------------------------- #
+class BruteStep:
+    """Interval-list oracle with the exact pre-rewrite query semantics."""
+
+    def __init__(self):
+        self.ivals = []                     # (t1, t2, amount), t1 pre-clamped
+        self.floor = -_INF
+
+    def add(self, t1, t2, amount):
+        if t1 < self.floor:
+            t1 = self.floor
+        if t2 <= t1:
+            return
+        self.ivals.append((t1, t2, amount))
+
+    def gc(self, now):
+        if now > self.floor:
+            self.floor = now
+
+    def segments(self):
+        """Coalesced (times, vals) with the -inf sentinel, like _StepFn."""
+        pts = sorted({t for iv in self.ivals for t in iv[:2]})
+        times, vals = [-_INF], [0]
+        for p in pts:
+            v = sum(a for t1, t2, a in self.ivals if t1 <= p < t2)
+            if v != vals[-1] or p == times[-1]:
+                times.append(p)
+                vals.append(v)
+            else:
+                # breakpoint with unchanged value: coalesced away
+                continue
+        return times, vals
+
+    def usage(self, x):
+        return sum(a for t1, t2, a in self.ivals if t1 <= x < t2)
+
+    def max_over(self, a, b):
+        if b <= a:
+            return 0
+        cands = [a] + [t for iv in self.ivals for t in iv[:2] if a < t < b]
+        return max(self.usage(x) for x in cands)
+
+    def integral(self, a, b):
+        if b <= a:
+            return 0.0
+        return sum(v * (min(t2, b) - max(t1, a))
+                   for t1, t2, v in self.ivals
+                   if t1 < b and t2 > a)
+
+    def first_fit(self, duration, not_before, limit):
+        """The seed's segment walk, verbatim, over the brute segments."""
+        times, vals = self.segments()
+        t = not_before if not_before > self.floor else self.floor
+        i = 0
+        while i + 1 < len(times) and times[i + 1] <= t:
+            i += 1
+        n = len(times)
+        cand = t
+        while True:
+            if vals[i] > limit:
+                i += 1
+                if i >= n:
+                    return cand
+                cand = times[i]
+            else:
+                seg_end = times[i + 1] if i + 1 < n else _INF
+                if seg_end - cand >= duration - EPS:
+                    return cand
+                i += 1
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_stepfn_fuzz_vs_brute(seed):
+    rng = random.Random(1000 + seed)
+    sf = _StepFn()
+    oracle = BruteStep()
+    now = 0.0
+    for op in range(120):
+        c = rng.random()
+        if c < 0.55:
+            t1 = now + rng.uniform(0, 25)
+            dur = rng.uniform(0.01, 8)
+            amount = rng.choice([1, 2, 4, -1, -2])
+            sf.add(t1, t1 + dur, amount)
+            oracle.add(t1, t1 + dur, amount)
+        elif c < 0.70 and rng.random() < 0.5:
+            # burst without intervening queries: exercises the vectorized
+            # batch rebuild instead of the in-place splice
+            for _ in range(rng.randint(10, 25)):
+                t1 = now + rng.uniform(0, 25)
+                dur = rng.uniform(0.01, 6)
+                sf.add(t1, t1 + dur, 1)
+                oracle.add(t1, t1 + dur, 1)
+        elif c < 0.80:
+            now += rng.uniform(0, 6)
+            sf.gc(now)
+            oracle.gc(now)
+        # queries at/after the gc horizon, every step
+        a = now + rng.uniform(0, 30)
+        b = a + rng.uniform(0.01, 15)
+        assert sf.max_over(a, b) == oracle.max_over(a, b)
+        assert sf.exceeds(a, b, 2) == (oracle.max_over(a, b) > 2)
+        assert sf.integral(a, b) == pytest.approx(oracle.integral(a, b),
+                                                  abs=1e-6)
+        dur = rng.uniform(0.05, 5)
+        limit = rng.choice([0, 1, 2, 3])
+        assert sf.first_fit(dur, a, limit) == pytest.approx(
+            oracle.first_fit(dur, a, limit), abs=0.0)
+        # structural invariants of the gap buffer
+        t, v = sf._view()
+        assert t[0] == -_INF and v[-1] == 0
+        assert all(t[i] < t[i + 1] for i in range(len(t) - 1))
+        assert all(v[i] != v[i + 1] for i in range(len(v) - 1))
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_device_calendar_fuzz(seed):
+    """Longer, meaner sequences than test_calendar_equivalence: tag
+    re-reservation, truncation churn, interleaved gc, plus the queries the
+    reference never had (earliest_fit, checked against the brute walk)."""
+    rng = random.Random(7000 + seed)
+    new = DeviceCalendar(0, 4)
+    ref = ReferenceDeviceCalendar(0, 4)
+    oracle = BruteStep()
+    live = []
+    now = 0.0
+    for op in range(150):
+        c = rng.random()
+        if c < 0.40 or not live:
+            t1 = now + rng.uniform(0, 40)
+            dur = rng.uniform(0.05, 12)
+            cores = rng.choice([1, 2, 4])
+            tag = (seed, op) if rng.random() < 0.9 or not live \
+                else rng.choice(live)          # sometimes replace a tag
+            prev = ref.get(tag)
+            if prev is not None:
+                oracle.add(prev.t1, prev.t2, -prev.amount)
+                live.remove(tag)
+            new.reserve(t1, t1 + dur, cores, tag)
+            ref.reserve(t1, t1 + dur, cores, tag)
+            oracle.add(t1, t1 + dur, cores)
+            live.append(tag)
+        elif c < 0.55:
+            tag = live.pop(rng.randrange(len(live)))
+            r = ref.get(tag)
+            oracle.add(r.t1, r.t2, -r.amount)
+            assert (new.release(tag) is None) == (ref.release(tag) is None)
+        elif c < 0.70:
+            tag = rng.choice(live)
+            r = ref.get(tag)
+            t_end = rng.uniform(r.t1 - 1.0, r.t2 + 1.0)
+            if t_end < r.t2:
+                oracle.add(max(t_end, r.t1), r.t2, -r.amount)
+            new.truncate(tag, t_end)
+            ref.truncate(tag, t_end)
+            if ref.get(tag) is None:
+                live.remove(tag)
+        elif c < 0.82:
+            now += rng.uniform(0, 12)
+            new.gc(now)
+            ref.gc(now)
+            oracle.gc(now)
+            live = [t for t in live if ref.get(t) is not None]
+        q1 = now + rng.uniform(0, 50)
+        q2 = q1 + rng.uniform(0.01, 25)
+        assert new.max_usage(q1, q2) == ref.max_usage(q1, q2)
+        assert new.free_cores(q1, q2) == ref.free_cores(q1, q2)
+        for cores in (1, 2, 4):
+            assert new.fits(q1, q2, cores) == ref.fits(q1, q2, cores)
+        assert new.load(q1, q2) == pytest.approx(ref.load(q1, q2), abs=1e-6)
+        assert new.completion_times(q1, q2) == ref.completion_times(q1, q2)
+        dur = rng.uniform(0.05, 8)
+        cores = rng.choice([1, 2, 4])
+        assert new.earliest_fit(dur, q1, cores) == pytest.approx(
+            oracle.first_fit(dur, q1, 4 - cores), abs=0.0)
+        assert len(new) == len(ref)
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_link_calendar_fuzz(seed):
+    """Link fuzz with reserve-then-cancel churn (exercises the mutation-log
+    annihilation path) on top of the usual earliest-slot agreement."""
+    rng = random.Random(33_000 + seed)
+    new = LinkCalendar()
+    ref = ReferenceLinkCalendar()
+    pairs = []
+    now = 0.0
+    for op in range(120):
+        c = rng.random()
+        if c < 0.45 or not pairs:
+            dur = rng.uniform(0.005, 3.0)
+            nb = now + rng.uniform(0, 25)
+            a = new.reserve_earliest(dur, nb, op)
+            b = ref.reserve_earliest(dur, nb, op)
+            assert a.t1 == b.t1 and a.t2 == b.t2
+            if rng.random() < 0.3:            # immediate rollback: the
+                new.cancel(a)                  # delta annihilates in-log
+                ref.cancel(b)
+            else:
+                pairs.append((a, b))
+        elif c < 0.65:
+            a, b = pairs.pop(rng.randrange(len(pairs)))
+            new.cancel(a)
+            ref.cancel(b)
+        elif c < 0.80:
+            now += rng.uniform(0, 8)
+            new.gc(now)
+            ref.gc(now)
+            pairs = [(a, b) for a, b in pairs if b.t2 > now]
+        q = now + rng.uniform(0, 35)
+        dur = rng.uniform(0.005, 4.0)
+        assert new.earliest_slot(dur, q) == ref.earliest_slot(dur, q)
+        assert len(new) == len(ref)
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_probe_plane_fuzz_vs_scalar(seed):
+    """The vectorized probe plane must answer bit-identically to the
+    per-device scalar queries under random mutation/gc interleavings."""
+    rng = random.Random(91_000 + seed)
+    n_dev = rng.randint(2, 9)
+    state = NetworkState(n_dev)
+    now = 0.0
+    live = []
+    for op in range(100):
+        c = rng.random()
+        if c < 0.55 or not live:
+            d = rng.randrange(n_dev)
+            t1 = now + rng.uniform(0, 30)
+            dur = rng.uniform(0.05, 10)
+            cores = rng.choice([1, 2, 4])
+            state.devices[d].reserve(t1, t1 + dur, cores, (seed, op))
+            live.append((d, (seed, op)))
+        elif c < 0.70:
+            d, tag = live.pop(rng.randrange(len(live)))
+            state.devices[d].release(tag)
+        elif c < 0.80:
+            now += rng.uniform(0, 8)
+            state.gc(now)
+            live = [(d, tag) for d, tag in live
+                    if state.devices[d].get(tag) is not None]
+        if rng.random() < 0.5:
+            continue                          # stale plane rows next round
+        plane = state.probe_plane()
+        a = now + rng.uniform(0, 40)
+        b = a + rng.uniform(0.01, 20)
+        fits2 = plane.fits_mask(a, b, 2)
+        free = plane.free_cores(a, b)
+        loads = plane.loads(a, b)
+        dur = rng.uniform(0.05, 8)
+        cores = rng.choice([1, 2, 4])
+        starts = plane.earliest_fit(dur, max(a, now), cores)
+        for d, dev in enumerate(state.devices):
+            assert bool(fits2[d]) == dev.fits(a, b, 2)
+            assert int(free[d]) == dev.free_cores(a, b)
+            assert float(loads[d]) == pytest.approx(dev.load(a, b), abs=1e-9)
+            assert float(starts[d]) == dev.earliest_fit(dur, max(a, now),
+                                                        cores)
+        window = state.probe_plane(a, b)
+        assert (window.fits(2) == fits2).all()
+        assert (window.free_cores == free).all()
