@@ -22,6 +22,15 @@ measures — rather than asserts — what the skyline-calendar rewrite
 * ``bench_batch_admission``     — sequential per-request admission vs
                                   ``allocate_low_priority_batch`` over the
                                   same burst.
+* ``bench_preemption``          — the PR 5 acceptance ladder: HP admissions
+                                  aimed at saturated devices (every probe
+                                  walks the eviction + victim-reallocation
+                                  path) through the vectorized preemption
+                                  plane vs the scalar eviction loop, over
+                                  identical states; hard-fails unless the
+                                  two paths make bit-identical decisions.
+                                  Also runs the ``preempt_storm`` scenario
+                                  family end-to-end.
 * ``bench_large_n``             — the sim/scenarios.py suite end-to-end:
                                   device ladder 4 -> 1024 (LARGE_N_TIERS),
                                   the three arrival families, and an HP:LP
@@ -62,7 +71,13 @@ from repro.core.calendar_reference import ReferenceNetworkState
 from repro.core.network import NetworkConfig
 from repro.core.policy import registered_policies
 from repro.core.scheduler import PreemptionAwareScheduler
-from repro.core.task import LowPriorityRequest, Priority, Task, reset_id_counters
+from repro.core.task import (
+    LowPriorityRequest,
+    Priority,
+    Task,
+    TaskState,
+    reset_id_counters,
+)
 from repro.sim.experiment import MIXED_SCENARIOS, ScenarioConfig, run_scenario
 from repro.sim.scenarios import (
     LARGE_N_TIERS,
@@ -307,6 +322,161 @@ def bench_batch_admission(n_devices: int = 64, n_requests: int = 200) -> list[Ro
 
 
 # --------------------------------------------------------------------- #
+# Preemption plane vs scalar eviction loop over identical saturated     #
+# devices (the PR 5 acceptance ladder + CI bit-identity smoke)          #
+# --------------------------------------------------------------------- #
+def _saturated_state(n_devices: int, per_device: int, net: NetworkConfig):
+    """Every device packed with ``per_device`` back-to-back 2-core LP
+    reservations in two staggered lanes (4/4 cores busy at every instant).
+    Each slot is a QUARTER of the HP window, so one admission has to chain
+    several evictions before its window clears — the multi-victim case
+    where the eviction loop's per-iteration cost shows.  Zero-laxity
+    deadlines (== the slot end) make the per-victim reallocation attempt
+    fast-fail the deadline pre-check identically — and cheaply — on both
+    eviction paths, leaving the eviction loop itself as the measured
+    quantity.  Mirrors are built up-front and the preload flushed, so the
+    plane side runs in its steady state (a live controller maintains both
+    incrementally from the first reservation; neither is admission
+    latency)."""
+    reset_id_counters()
+    state = NetworkState(n_devices)
+    for dev in state.devices:
+        dev.lp_mirror()
+    dur = net.hp_slot_time / 4.0
+    for dev in state.devices:
+        for lane in range(2):
+            t = -lane * dur / 2.0
+            for k in range(per_device // 2):
+                task = Task(priority=Priority.LOW, source_device=dev.device,
+                            deadline=t + dur, frame_id=k)
+                task.state = TaskState.ALLOCATED
+                dev.reserve(t, t + dur, 2, task)
+                t += dur
+        dev.fits(0.0, 0.1, 1)   # flush the buffered preload (untimed)
+    return state
+
+
+def _probe_preemptions_paired(plane_state, scalar_state, net: NetworkConfig,
+                              probes: int, warmup: int = 6):
+    """Drive the SAME HP admission stream through both eviction paths,
+    alternating probe-by-probe so machine noise hits both sides equally
+    (the paired ratio is the stable signal on shared runners).  Returns
+    per-path mean admission time, mean eviction-loop time
+    (``Metrics.t_evict`` — the phase the vectorized plane replaces), the
+    two decision traces (bit-identity check) and the plane metrics.  The
+    first ``warmup`` probes run untimed-in-effect: their admissions mutate
+    both states identically but are excluded from the means."""
+    scheds = {
+        True: PreemptionAwareScheduler(plane_state, net, preemption=True,
+                                       preemption_plane=True),
+        False: PreemptionAwareScheduler(scalar_state, net, preemption=True,
+                                        preemption_plane=False),
+    }
+    n = len(plane_state.devices)
+    outcomes = {True: [], False: []}
+    t_total = {True: 0.0, False: 0.0}
+    for i in range(warmup + probes):
+        for plane in (True, False):
+            task = Task(priority=Priority.HIGH, source_device=i % n,
+                        deadline=1e6, frame_id=i, task_id=10**7 + i)
+            t0 = time.perf_counter()
+            res = scheds[plane].allocate_high_priority(task, 0.0)
+            dt = time.perf_counter() - t0
+            if i >= warmup:
+                t_total[plane] += dt
+            outcomes[plane].append((
+                res.success,
+                tuple(t.task_id for t in res.preempted),
+                tuple((a.task.task_id, a.device, round(a.t_start, 9))
+                      for a in res.reallocations),
+            ))
+    for plane in (True, False):
+        m = scheds[plane].metrics
+        outcomes[plane].append(("metrics", m.preemptions, m.realloc_success,
+                                m.realloc_failure))
+        # t_evict gets one entry per admission that REACHED the eviction
+        # branch; the warmup slice below is only aligned if every probe
+        # did, so a partially-unsaturated workload fails loudly instead of
+        # silently skewing the CI-gated ratio
+        if len(m.t_evict) != warmup + probes:
+            raise RuntimeError(
+                f"only {len(m.t_evict)}/{warmup + probes} probes reached "
+                "the eviction loop (workload no longer saturates every "
+                "probed window)")
+    evict_us = {
+        plane: sum(scheds[plane].metrics.t_evict[warmup:]) / probes * 1e6
+        for plane in (True, False)
+    }
+    return ({p: t_total[p] / probes * 1e6 for p in (True, False)},
+            evict_us, outcomes, scheds[True].metrics)
+
+
+def bench_preemption(quick: bool = False) -> list[Row]:
+    """HP eviction latency, vectorized preemption plane vs the scalar loop,
+    on identical saturated networks (64 / 256 / 1024 devices), plus the
+    ``preempt_storm`` scenario family end-to-end.  Raises if the two
+    eviction paths ever disagree on a decision."""
+    # Fat link for the micro tiers: the paper's 16.3 MB/s AP congests after
+    # a few dozen probes at a pinned ``now`` and the link ops (identical on
+    # both paths) would drown the quantity under test — the eviction loop.
+    # The storm scenarios below keep the paper link.
+    net = NetworkConfig(throughput_bps=1e9, jitter_pad_s=0.0)
+    rows: list[Row] = []
+    tiers = ((64, 1024, 30), (256, 1024, 30)) if quick else \
+            ((64, 1024, 40), (256, 1024, 40), (1024, 256, 24))
+    for n_devices, per_device, probes in tiers:
+        label = f"{n_devices}dev_{per_device}per"
+        plane_state = _saturated_state(n_devices, per_device, net)
+        scalar_state = _saturated_state(n_devices, per_device, net)
+        warmup = 6
+        alloc_us, evict_us, outcomes, m = _probe_preemptions_paired(
+            plane_state, scalar_state, net, probes, warmup)
+        if outcomes[True] != outcomes[False]:
+            raise RuntimeError(
+                f"preemption plane diverged from the scalar loop at {label}")
+        if m.preemptions == 0:
+            raise RuntimeError(
+                f"bench_preemption at {label} triggered no preemptions "
+                "(the workload no longer saturates the probed windows)")
+        rows.append(("preemption", label, "scalar_hp_preempt_us",
+                     alloc_us[False]))
+        rows.append(("preemption", label, "plane_hp_preempt_us",
+                     alloc_us[True]))
+        rows.append(("preemption", label, "scalar_evict_us", evict_us[False]))
+        rows.append(("preemption", label, "plane_evict_us", evict_us[True]))
+        rows.append(("preemption", label, "hp_preempt_speedup_x",
+                     alloc_us[False] / max(alloc_us[True], 1e-9)))
+        rows.append(("preemption", label, "evict_speedup_x",
+                     evict_us[False] / max(evict_us[True], 1e-9)))
+        rows.append(("preemption", label, "preemptions_per_probe",
+                     m.preemptions / (probes + warmup)))
+
+    # end-to-end preemption-adversarial scenarios (plane on)
+    for n in (16, 64) if quick else (64, 256):
+        cfg = LargeNConfig(name=f"storm_n{n}", n_devices=n,
+                           arrival="preempt_storm",
+                           duration=20.0 if quick else 40.0)
+        s = run_large_n(cfg)
+        for k in ("hp_preempt_us_mean", "n_hp_preempt", "preemptions",
+                  "realloc_success", "realloc_failure", "wall_s"):
+            rows.append(("preemption", cfg.name, k, float(s[k])))
+
+    # end-to-end decision equality on one full storm (plane vs scalar)
+    cfg = LargeNConfig(name="storm_diff", n_devices=16,
+                       arrival="preempt_storm", duration=20.0)
+    drop = ("hp_alloc_us_mean", "hp_alloc_us_p99", "hp_preempt_us_mean",
+            "lp_alloc_us_mean", "lp_alloc_us_p99", "wall_s")
+    a = {k: v for k, v in run_large_n(cfg).items() if k not in drop}
+    b = {k: v for k, v in
+         run_large_n(cfg, preemption_plane=False).items() if k not in drop}
+    if a != b:
+        raise RuntimeError(
+            f"preempt_storm decisions diverged between the plane and the "
+            f"scalar loop: {a} != {b}")
+    return rows
+
+
+# --------------------------------------------------------------------- #
 # Policy-registry sweep: every registered discipline must complete a    #
 # small scenario (CI smoke gate for the unified SchedulingPolicy API)   #
 # --------------------------------------------------------------------- #
@@ -435,6 +605,8 @@ def bench_all(quick: bool = False) -> list[Row]:
         rows += bench_probe_plane()
     gc.collect()
     rows += bench_batch_admission(16 if quick else 64, 60 if quick else 200)
+    gc.collect()
+    rows += bench_preemption(quick)  # hard-fails on plane/scalar divergence
     gc.collect()
     rows += bench_large_n(quick)
     return rows

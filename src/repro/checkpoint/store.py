@@ -3,11 +3,29 @@
 No external deps (orbax unavailable offline).  Leaves are addressed by their
 jax.tree_util key-path string; restore validates structure against a
 reference tree (shapes + dtypes) so partial/corrupt checkpoints fail loudly.
+
+Durability contract:
+
+* ``save`` stages the payload and manifest in a temporary sibling
+  directory and swaps it into place with ``os.replace``, so an
+  interrupted save can never leave a torn checkpoint (half-written
+  payload, or new manifest next to old arrays) at ``path`` — whenever a
+  checkpoint exists there, it is complete.  POSIX cannot exchange two
+  directories atomically, so the overwrite path briefly parks the
+  previous checkpoint at ``<path>.old.<pid>`` between two renames; a
+  failed swap rolls the previous checkpoint back, and only a hard crash
+  inside that window leaves ``path`` absent with the complete previous
+  version recoverable from the ``.old`` sibling.
+* ``restore`` refuses dtype mismatches by default — silently ``astype``-ing
+  an integer/bool checkpoint leaf into a float reference corrupts state
+  like RNG keys and step counters.  Pass ``cast=True`` to opt into
+  converting every leaf to the reference dtype.
 """
 from __future__ import annotations
 
 import json
 import os
+import shutil
 from typing import Any, Optional
 
 import jax
@@ -22,21 +40,75 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     return flat
 
 
+def _pid_alive(pid: int) -> bool:
+    """Whether the pid a litter suffix names still runs (own pid counts)."""
+    if pid == os.getpid():
+        return True
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True         # exists, owned by someone else
+    return True
+
+
 def save(path: str, tree: Any, metadata: Optional[dict] = None) -> None:
-    os.makedirs(path, exist_ok=True)
-    flat = _flatten(tree)
-    np.savez(os.path.join(path, "arrays.npz"), **flat)
-    manifest = {
-        "leaves": {
-            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-            for k, v in flat.items()
-        },
-        "metadata": metadata or {},
-    }
-    tmp = os.path.join(path, "manifest.json.tmp")
-    with open(tmp, "w") as f:
-        json.dump(manifest, f, indent=1)
-    os.replace(tmp, os.path.join(path, "manifest.json"))
+    """Write the checkpoint via a staged temp dir + ``os.replace`` swap
+    (see the module docstring for the exact durability guarantees)."""
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    # clear litter an earlier pid's interrupted save may have left beside
+    # this checkpoint — but only from pids that are no longer alive (a
+    # live pid's .tmp dir is a concurrent saver's staging area), and a
+    # parked .old sibling only once a complete checkpoint exists at path
+    # (it still holds a COMPLETE older version until then)
+    base = os.path.basename(path)
+    for entry in os.listdir(parent) if os.path.isdir(parent) else ():
+        stale_tmp = entry.startswith(f"{base}.tmp.")
+        stale_old = entry.startswith(f"{base}.old.") and os.path.isdir(path)
+        suffix = entry.rsplit(".", 1)[-1]
+        # only suffixes that are literal pids are OUR litter — anything
+        # else (a user's `ckpt.old.bak`) is not ours to delete
+        if (stale_tmp or stale_old) and suffix.isdigit() and \
+                not _pid_alive(int(suffix)):
+            shutil.rmtree(os.path.join(parent, entry), ignore_errors=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    try:
+        flat = _flatten(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {
+            "leaves": {
+                k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in flat.items()
+            },
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.isdir(path):
+            # os.replace cannot overwrite a non-empty directory: park the
+            # old checkpoint aside, swap the new one in, then drop the old.
+            # If the swap itself fails, roll the previous checkpoint back
+            # so `path` never stays empty on a survivable error.
+            old = f"{path}.old.{os.getpid()}"
+            if os.path.isdir(old):
+                shutil.rmtree(old)
+            os.replace(path, old)
+            try:
+                os.replace(tmp, path)
+            except BaseException:
+                os.replace(old, path)           # roll back the previous
+                raise
+            shutil.rmtree(old)
+        else:
+            os.replace(tmp, path)
+    finally:
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp)
 
 
 def load_metadata(path: str) -> dict:
@@ -44,9 +116,11 @@ def load_metadata(path: str) -> dict:
         return json.load(f)["metadata"]
 
 
-def restore(path: str, reference: Any) -> Any:
+def restore(path: str, reference: Any, *, cast: bool = False) -> Any:
     """Restore into the structure of ``reference`` (a pytree of arrays or
-    ShapeDtypeStructs)."""
+    ShapeDtypeStructs).  Shape mismatches always raise; dtype mismatches
+    raise a ``ValueError`` naming the leaf unless ``cast=True`` explicitly
+    opts into converting leaves to the reference dtypes."""
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
@@ -60,7 +134,14 @@ def restore(path: str, reference: Any) -> Any:
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(
                 f"{key}: checkpoint shape {arr.shape} != expected {ref.shape}")
-        leaves.append(arr.astype(ref.dtype))
+        ref_dtype = np.dtype(ref.dtype)
+        if arr.dtype != ref_dtype:
+            if not cast:
+                raise ValueError(
+                    f"{key}: checkpoint dtype {arr.dtype} != expected "
+                    f"{ref_dtype} (pass cast=True to convert explicitly)")
+            arr = arr.astype(ref_dtype)
+        leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

@@ -69,6 +69,8 @@ from typing import Callable, Iterable, Iterator, Optional
 
 import numpy as np
 
+from .task import Priority, Task
+
 EPS = 1e-9
 _INF = math.inf
 _EMPTY_F = np.empty(0, dtype=np.float64)
@@ -367,6 +369,22 @@ class _StepFn:
             + v[i2 - 1] * (t2 - t[i2 - 1])             # right boundary clip
         )
 
+    def window_profile(self, t1: float, t2: float) -> tuple[np.ndarray, np.ndarray]:
+        """The skyline restricted to [t1, t2): parallel ``(starts, vals)``
+        arrays where ``vals[i]`` holds on ``[starts[i], starts[i+1])`` and
+        the last segment runs to ``t2``.  ``starts[0] == t1`` exactly; an
+        empty window returns two empty arrays.  Feeds the preemption
+        plane's incremental refit grid (scheduler ``_HPWindowGrid``)."""
+        if t2 <= t1:
+            return _EMPTY_F, np.empty(0, dtype=np.int64)
+        self._flush()
+        t, v = self._view()
+        i1 = int(t.searchsorted(t1, side="right")) - 1
+        i2 = int(t.searchsorted(t2, side="left"))
+        starts = t[i1:i2].copy()
+        starts[0] = t1
+        return starts, v[i1:i2].copy()
+
     def first_fit(self, duration: float, not_before: float, limit: int) -> float:
         """Earliest t >= not_before with usage <= limit over [t, t+duration).
 
@@ -490,6 +508,112 @@ class LinkCalendar:
         self._sky.gc(now)
 
 
+class _LPMirror:
+    """Array mirror of one device's LP-tagged reservations — the preemption
+    plane's conflict-candidate columns.
+
+    The HP eviction loop used to rebuild a Python list of conflicting LP
+    reservations per iteration (O(reservations) interpreted work per
+    victim).  This mirror keeps the candidates as stacked NumPy columns
+    (``t1`` / ``t2`` / ``amount`` over rows ``[0, m)`` plus a parallel
+    ``tasks`` ref list), so conflict enumeration is ONE overlap mask and
+    victim ranking ONE masked argmin per iteration.
+
+    Exactness contract (tests/test_preemption_plane.py):
+
+    * rows preserve the ``DeviceCalendar._res`` dict's insertion order — a
+      re-reserved tag moves to the END, exactly like the dict — so a masked
+      first-tie argmin reproduces ``min()``-over-iteration tie-breaks
+      bit-for-bit;
+    * the mirror is synced by the calendar's own mutation hooks (reserve /
+      release / truncate / gc), never rebuilt per admission; removal only
+      clears the ``alive`` bit, keeping surviving rows' order stable
+      (compaction runs between admissions, in :meth:`compact`);
+    * task deadlines are NOT mirrored — they are gathered live per
+      admission, because callers may legally mutate ``task.deadline`` after
+      reserving.
+    """
+
+    __slots__ = ("t1", "t2", "amount", "alive", "tasks", "rows", "m", "dead")
+
+    def __init__(self, cap: int = 16) -> None:
+        self.t1 = np.empty(cap)
+        self.t2 = np.empty(cap)
+        self.amount = np.empty(cap, dtype=np.int64)
+        self.alive = np.zeros(cap, dtype=bool)
+        self.tasks: list[Optional[Task]] = []   # parallel refs, len == m
+        self.rows: dict[int, int] = {}          # task_id -> row
+        self.m = 0                              # append cursor
+        self.dead = 0
+
+    @staticmethod
+    def tracks(tag: object) -> bool:
+        return isinstance(tag, Task) and tag.priority == Priority.LOW
+
+    def add(self, r: Reservation) -> None:
+        m = self.m
+        if m == self.t1.shape[0]:
+            grow = max(16, m)
+            self.t1 = np.concatenate((self.t1, np.empty(grow)))
+            self.t2 = np.concatenate((self.t2, np.empty(grow)))
+            self.amount = np.concatenate(
+                (self.amount, np.empty(grow, dtype=np.int64)))
+            self.alive = np.concatenate(
+                (self.alive, np.zeros(grow, dtype=bool)))
+        task: Task = r.tag
+        self.t1[m], self.t2[m], self.amount[m] = r.t1, r.t2, r.amount
+        self.alive[m] = True
+        self.tasks.append(task)
+        self.rows[task.task_id] = m
+        self.m = m + 1
+
+    def discard(self, tag: object) -> None:
+        if not isinstance(tag, Task):
+            return
+        row = self.rows.pop(tag.task_id, None)
+        if row is None:
+            return
+        self.alive[row] = False
+        self.tasks[row] = None
+        self.dead += 1
+
+    def truncate(self, tag: object, t_end: float) -> None:
+        if not isinstance(tag, Task):
+            return
+        row = self.rows.get(tag.task_id)
+        if row is not None:
+            self.t2[row] = t_end
+
+    def gc(self, now: float) -> None:
+        """Drop rows whose reservations the calendar's gc retired
+        (``t2 <= now``) — one vectorized sweep, not per-row Python."""
+        if not self.m:
+            return
+        for row in np.flatnonzero(self.alive[: self.m]
+                                  & (self.t2[: self.m] <= now)):
+            task = self.tasks[row]
+            self.rows.pop(task.task_id, None)
+            self.tasks[row] = None
+            self.alive[row] = False
+            self.dead += 1
+
+    def compact(self) -> None:
+        """Squeeze out dead rows (order-preserving); amortised O(1) — runs
+        only from the accessor, never inside an eviction loop."""
+        if self.dead <= 32 or self.dead * 2 <= self.m:
+            return
+        keep = np.flatnonzero(self.alive[: self.m])
+        n = keep.shape[0]
+        self.t1[:n] = self.t1[keep]
+        self.t2[:n] = self.t2[keep]
+        self.amount[:n] = self.amount[keep]
+        self.alive[:n] = True
+        self.alive[n:] = False
+        self.tasks = [self.tasks[i] for i in keep]
+        self.rows = {t.task_id: i for i, t in enumerate(self.tasks)}
+        self.m, self.dead = n, 0
+
+
 class DeviceCalendar:
     """Capacity-C calendar for one edge device's cores.
 
@@ -514,6 +638,7 @@ class DeviceCalendar:
         self._seq = itertools.count()
         self._notify: Optional[Callable[[int], None]] = None
         self._expiry_sink: Optional[list] = None     # NetworkState's gc heap
+        self._lp: Optional[_LPMirror] = None         # preemption-plane mirror
 
     def __len__(self) -> int:
         return len(self._res)
@@ -545,6 +670,29 @@ class DeviceCalendar:
     def earliest_fit(self, duration: float, not_before: float, cores: int) -> float:
         """Earliest t >= not_before where ``cores`` fit for ``duration``."""
         return self._sky.first_fit(duration, not_before, self.capacity - cores)
+
+    def usage_segments(self, t1: float, t2: float) -> tuple[np.ndarray, np.ndarray]:
+        """Raw core-usage segments over [t1, t2) as ``(starts, vals)``
+        arrays — NO EPS shrink; callers pick their own window semantics.
+        The preemption plane's refit grid (scheduler ``_HPWindowGrid``)
+        builds on this with its left bound already EPS-shifted and an
+        extended right horizon, so a max over its segments equals
+        :meth:`max_usage` of any EPS-shrunk window inside the span."""
+        return self._sky.window_profile(t1, t2)
+
+    def lp_mirror(self) -> _LPMirror:
+        """The device's LP-reservation mirror (preemption plane), built
+        lazily by backfilling from the live reservation dict in insertion
+        order; once built, the mutation hooks keep it in sync."""
+        lp = self._lp
+        if lp is None:
+            lp = self._lp = _LPMirror()
+            for r in self._res.values():
+                if _LPMirror.tracks(r.tag):
+                    lp.add(r)
+        else:
+            lp.compact()
+        return lp
 
     def completion_times(self, after: float, before: float) -> list[float]:
         a = self._t2s
@@ -580,6 +728,8 @@ class DeviceCalendar:
             self._remove_interval(prev)
         r = Reservation(t1, t2, cores, tag)
         self._res[tag] = r
+        if self._lp is not None and _LPMirror.tracks(tag):
+            self._lp.add(r)
         self._sky.add(t1, t2, cores)
         self._t2s_insert(t2)
         heapq.heappush(self._expiry, (t2, next(self._seq), tag))
@@ -589,6 +739,8 @@ class DeviceCalendar:
         return r
 
     def _remove_interval(self, r: Reservation) -> None:
+        if self._lp is not None:
+            self._lp.discard(r.tag)
         self._sky.add(r.t1, r.t2, -r.amount)
         self._t2s_remove(r.t2)
 
@@ -619,6 +771,8 @@ class DeviceCalendar:
         self._t2s_remove(r.t2)
         self._t2s_insert(t_end)
         r.t2 = t_end
+        if self._lp is not None:
+            self._lp.truncate(tag, t_end)
         heapq.heappush(self._expiry, (t_end, next(self._seq), tag))
         if self._expiry_sink is not None:
             heapq.heappush(self._expiry_sink, (t_end, self.device))
@@ -645,6 +799,8 @@ class DeviceCalendar:
         if lo:
             self._t2s = a[lo:].copy()
         self._sky.gc(now)
+        if self._lp is not None:
+            self._lp.gc(now)
         self._touch()
 
 

@@ -52,6 +52,9 @@ class Metrics:
     t_hp_preempt: list[float] = field(default_factory=list)
     t_lp_alloc: list[float] = field(default_factory=list)
     t_realloc: list[float] = field(default_factory=list)
+    # eviction-loop phase of preempting HP admissions only (DESIGN.md §12;
+    # the quantity bench_preemption's vectorized-vs-scalar gate compares)
+    t_evict: list[float] = field(default_factory=list)
 
     # Heterogeneous workloads (core/profiles.py): outcome counters per task
     # type.  Un-annotated tasks (task_type=None — the paper's single-model

@@ -504,11 +504,13 @@ class SchedulerPolicy(CalendarPolicy):
                  capacity: int = 4, preemption: bool = True,
                  victim_policy: str = "farthest_deadline",
                  metrics: Optional[Metrics] = None,
-                 allow_offload: bool = True, **_ignored) -> None:
+                 allow_offload: bool = True,
+                 preemption_plane: bool = True, **_ignored) -> None:
         super().__init__(n_devices, net, capacity=capacity, metrics=metrics)
         self.sched = PreemptionAwareScheduler(
             self.state, net, preemption=preemption, metrics=self.metrics,
             victim_policy=victim_policy, allow_offload=allow_offload,
+            preemption_plane=preemption_plane,
         )
 
     def decide_hp(self, task: Task, now: float) -> Decision:

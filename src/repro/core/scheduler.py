@@ -18,7 +18,12 @@ Every probe the algorithms issue (`fits`, `load`, `earliest_slot`,
 O(log n + k) for k structures intersecting the probed window, so:
 
 * HP admission is O(log n + conflicts) per call — the preemption loop only
-  enumerates reservations on the *source device*.
+  enumerates reservations on the *source device*, and through the
+  vectorized preemption plane (DESIGN.md §12) that enumeration is ONE
+  overlap mask over the device's LP-reservation mirror plus one masked
+  argmin per victim, with incremental refit (`_HPWindowGrid`) instead of a
+  full ``fits`` re-probe after each eviction.  The scalar loop is kept as
+  the differential reference (``preemption_plane=False``).
 * LP admission is O(T · D · (log n + k)) for T time-points searched and D
   devices, with T bounded by the completion points inside the request's
   deadline window rather than every reservation in the network.
@@ -27,6 +32,14 @@ O(log n + k) for k structures intersecting the probed window, so:
   completion points created by the batch itself), instead of re-running the
   full sweep per request — the per-request cost at high arrival rates drops
   by roughly the batch size (measured in benchmarks/scheduler_micro.py).
+
+Victim lifecycle: EVERY evicted victim gets the best-effort reallocation
+pass (`_reallocate_victims`) — also when the HP admission itself ultimately
+fails after its preemptions (deadline slipped or non-LP blockers remain).
+A victim is never left stranded in ``PREEMPTED``: it either re-enters
+``ALLOCATED`` with a fresh slot before its deadline or transitions to
+``FAILED``, and ``realloc_success``/``realloc_failure`` account for both
+paths (the failure path was a PR 5 bugfix).
 
 Link-slot hygiene: every committed allocation records its link reservations
 (`alloc`/`xfer`/`update` messages); when a victim is preempted, its
@@ -48,6 +61,7 @@ from .calendar import EPS, NetworkState, Reservation
 from .metrics import Metrics
 from .network import NetworkConfig
 from .task import LowPriorityRequest, Priority, Task, TaskState
+from .victims import GOOD_STATES, rank_victims, victim_sort_key
 
 #: Victim-selection rules accepted by the preemption mechanism (also the
 #: options surfaced by ``ScenarioConfig`` validation).
@@ -115,6 +129,75 @@ class LinkSlotRegistry:
         self._prune_at = max(256, 2 * len(self._slots))
 
 
+class _HPWindowGrid:
+    """Incremental refit tracker for one HP admission.
+
+    The scalar eviction loop re-probes ``dev.fits(t1, t2, 1)`` after every
+    eviction, paying a skyline flush (one splice per buffered release) per
+    probe.  This grid instead materialises the usage segments ONCE over an
+    *extended* horizon ``[t1, cover)`` — the admission window plus the
+    forward drift the loop's own preempt messages can cause (each message
+    occupies the link and pushes the re-derived window later, never
+    earlier) — cut at every live LP candidate's endpoints so any future
+    eviction aligns with existing breakpoints.  Each eviction is then an
+    exact usage-mass delta over its segment range, and each refit a
+    searchsorted slice-max, both O(covered segments) C-level with no
+    skyline interaction at all.
+
+    Integer arithmetic over the same EPS-shrunk windows every skyline
+    query uses, so ``fits_window`` is bit-identical to ``dev.fits`` after
+    the same evictions (fuzzed in tests/test_preemption_plane.py).
+    ``fits_window`` returns None when the window drifted past ``cover`` —
+    the caller rebuilds (a cold rebuild is always exact: the flushed
+    skyline already reflects every eviction so far).
+    """
+
+    __slots__ = ("a", "cover", "cap", "bp", "vals")
+
+    def __init__(self, dev, t1: float, cover: float,
+                 cand_t1: np.ndarray, cand_t2: np.ndarray,
+                 alive: np.ndarray) -> None:
+        a = t1 + EPS
+        self.a, self.cover = a, cover
+        self.cap = dev.capacity
+        starts, vals = dev.usage_segments(a, cover)
+        if starts.size:
+            cuts = np.concatenate((cand_t1[alive], cand_t2[alive]))
+            cuts = cuts[(cuts > a) & (cuts < cover)]
+            if cuts.size:
+                bp = np.unique(np.concatenate((starts, cuts)))
+                vals = vals[np.searchsorted(starts, bp, side="right") - 1]
+                starts = bp
+        self.bp = starts
+        self.vals = vals.astype(np.int64, copy=True)
+
+    def fits_window(self, t1: float, t2: float, cores: int):
+        """Whether ``cores`` more cores fit everywhere in [t1, t2)
+        (EPS-shrunk, like every calendar query); None = window no longer
+        covered, rebuild required."""
+        a, b = t1 + EPS, t2 - EPS
+        if a < self.a - EPS or b > self.cover:
+            return None
+        if b <= a or self.vals.size == 0:
+            return True
+        bp = self.bp
+        i1 = int(bp.searchsorted(a, side="right")) - 1
+        i2 = int(bp.searchsorted(b, side="left"))
+        if i1 < 0:
+            i1 = 0
+        return int(self.vals[i1:i2].max()) + cores <= self.cap
+
+    def evict(self, vt1: float, vt2: float, amount: int) -> None:
+        """Subtract an evicted reservation's usage mass from the grid."""
+        if self.vals.size == 0:
+            return
+        bp = self.bp
+        j1 = int(bp.searchsorted(vt1 if vt1 > self.a else self.a,
+                                 side="left"))
+        j2 = int(bp.searchsorted(vt2, side="left"))
+        self.vals[j1:j2] -= amount
+
+
 class PreemptionAwareScheduler:
     """Controller-side scheduler over the time-slotted network state."""
 
@@ -127,6 +210,7 @@ class PreemptionAwareScheduler:
         on_preempt: Optional[Callable[[Task], None]] = None,
         victim_policy: str = "farthest_deadline",
         allow_offload: bool = True,
+        preemption_plane: bool = True,
     ) -> None:
         self.state = state
         self.net = net
@@ -159,6 +243,14 @@ class PreemptionAwareScheduler:
         # benchmarks can still drive this scheduler over the seed calendars
         # through the per-device scalar path.
         self._plane_ok = hasattr(state, "probe_plane")
+        # The vectorized preemption plane (DESIGN.md §12): HP eviction via
+        # overlap masks + one-pass victim ranking over each device's
+        # LP-reservation mirror, with incremental refit.  Decision-identical
+        # to the scalar loop (`_evict_conflicts_scalar`, kept as the
+        # differential reference); ``preemption_plane=False`` forces the
+        # scalar path for differential tests and benchmarks.
+        self._preempt_plane = (preemption_plane and bool(state.devices)
+                               and hasattr(state.devices[0], "lp_mirror"))
         # Probe accounting (tests/test_grid_dedup.py, DESIGN.md §11): how
         # many per-task placement probes ran, how many time-point rounds the
         # LP sweeps walked, and how much grid traffic the exact-duplicate
@@ -212,7 +304,68 @@ class PreemptionAwareScheduler:
         if not self.preemption:
             return HPResult(False)
 
-        # 3. preemption: evict conflicting LP tasks, farthest deadline first
+        # 3. preemption: evict conflicting LP tasks in victim-policy order
+        # until the window fits — through the vectorized preemption plane
+        # (DESIGN.md §12) or the scalar differential reference.
+        e_wall = _time.perf_counter()
+        if self._preempt_plane:
+            plan, preempted = self._evict_conflicts_plane(
+                dev, plan, placement, now)
+        else:
+            plan, preempted = self._evict_conflicts_scalar(
+                dev, plan, placement, now)
+        self.metrics.t_evict.append(_time.perf_counter() - e_wall)
+
+        if plan is None or not dev.fits(plan[1], plan[2], 1):
+            # The HP task ultimately cannot be placed — but its victims were
+            # already evicted.  They STILL get the reallocation pass (each
+            # one a placement attempt before its own deadline, else FAILED):
+            # returning them stranded in PREEMPTED forever broke the paper's
+            # reallocation guarantee and skewed the realloc accounting
+            # (tests/test_victim_lifecycle.py::
+            # test_failed_hp_admission_still_reallocates_victims).
+            return HPResult(False, preempted=preempted,
+                            reallocations=self._reallocate_victims(preempted,
+                                                                   now))
+        msg_t1, t1, t2 = plan
+
+        alloc = self._commit_hp(task, msg_t1, msg_dur, t1, t2)
+
+        # 4. attempt to reallocate every victim before its deadline
+        return HPResult(True, alloc, preempted,
+                        self._reallocate_victims(preempted, now))
+
+    # ------------------------------------------------------------------ #
+    # Preemption: eviction loop (vectorized plane + scalar reference)    #
+    # ------------------------------------------------------------------ #
+    def _preempt_victim(self, dev, victim: Task, amount: int,
+                        now: float) -> None:
+        """Evict one victim — the side effects both eviction loops share."""
+        net, link = self.net, self.state.link
+        dev.release(victim)
+        # Cancel the victim's still-pending link slots (xfer/update):
+        # leaving them reserved would permanently inflate link congestion
+        # with traffic for a task that will never run in that slot.
+        self.links.cancel_pending(link, victim.task_id, now)
+        victim.state = TaskState.PREEMPTED
+        victim.preempt_count += 1
+        self.metrics.preemptions += 1
+        self.metrics.preempted_by_cores[amount] += 1
+        # preemption message to the executing device
+        pre_dur = net.slot(net.msg.preempt)
+        link.reserve_earliest(pre_dur, now, ("preempt", victim.task_id))
+        if self.on_preempt is not None:
+            self.on_preempt(victim)
+
+    def _evict_conflicts_scalar(self, dev, plan, placement, now: float):
+        """The scalar eviction loop, kept verbatim as the differential
+        reference for the vectorized plane (the `calendar_reference`
+        pattern): per iteration it rebuilds the conflicting-LP list with a
+        Python sweep over every reservation on the device and picks one
+        victim with ``min()``.  Returns ``(plan, preempted)``; ``plan`` is
+        None when the preempt messages pushed the window past the task's
+        deadline."""
+        msg_t1, t1, t2 = plan
         preempted: list[Task] = []
         while not dev.fits(t1, t2, 1):
             conflicts = [
@@ -225,37 +378,138 @@ class PreemptionAwareScheduler:
             if not conflicts:
                 break
             victim_res = min(conflicts, key=self._victim_key)
-            victim: Task = victim_res.tag
-            dev.release(victim)
-            # Cancel the victim's still-pending link slots (xfer/update):
-            # leaving them reserved would permanently inflate link congestion
-            # with traffic for a task that will never run in that slot.
-            self.links.cancel_pending(link, victim.task_id, now)
-            victim.state = TaskState.PREEMPTED
-            victim.preempt_count += 1
-            self.metrics.preemptions += 1
-            self.metrics.preempted_by_cores[victim_res.amount] += 1
-            # preemption message to the executing device
-            pre_dur = net.slot(net.msg.preempt)
-            link.reserve_earliest(pre_dur, now, ("preempt", victim.task_id))
-            if self.on_preempt is not None:
-                self.on_preempt(victim)
-            preempted.append(victim)
+            self._preempt_victim(dev, victim_res.tag, victim_res.amount, now)
+            preempted.append(victim_res.tag)
             plan = placement()              # link moved; re-derive the window
             if plan is None:
-                return HPResult(False, preempted=preempted)
+                return None, preempted
             msg_t1, t1, t2 = plan
+        return plan, preempted
 
-        if not dev.fits(t1, t2, 1):
-            return HPResult(False, preempted=preempted)
+    def _evict_conflicts_plane(self, dev, plan, placement, now: float):
+        """Vectorized eviction (DESIGN.md §12), decision-identical to
+        `_evict_conflicts_scalar` (tests/test_preemption_plane.py):
 
-        alloc = self._commit_hp(task, msg_t1, msg_dur, t1, t2)
+        * conflict enumeration is ONE overlap mask over the device's
+          LP-reservation mirror (stacked t1/t2 columns in reservation-dict
+          insertion order) — the scalar loop's O(reservations) Python sweep
+          per victim becomes an O(reservations) C-level compare;
+        * victim ranking is one pass over the stacked `_victim_key` columns
+          of the handful of MASKED rows — deadlines are gathered live per
+          conflict (a column snapshot would go stale: callers may legally
+          mutate ``task.deadline`` after reserving), and the
+          ``weakest_set`` set-health column is backed by per-request good
+          counters built lazily and decremented as the loop's own evictions
+          transition victims out of their sets' good states;
+        * refit is the incremental `_HPWindowGrid`: each eviction subtracts
+          the victim's usage mass from a segment grid built once over the
+          window plus its expected drift, instead of re-probing
+          ``dev.fits`` (and re-flushing the skyline) per victim; the grid
+          is rebuilt only if an eviction chain outruns the covered
+          horizon.
 
-        # 4. attempt to reallocate every victim before its deadline
+        The loop assumes the only task-state/calendar mutations during the
+        admission are its own (the ``on_preempt`` callback must not reserve
+        on this device or flip sibling task states — none of the runtimes
+        do)."""
+        mir = dev.lp_mirror()
+        m = mir.m
+        msg_t1, t1, t2 = plan
+        if m == 0:
+            # no LP reservations at all -> the scalar loop's first conflict
+            # sweep comes back empty and it breaks immediately
+            return plan, []
+        ct1, ct2, camt = mir.t1[:m], mir.t2[:m], mir.amount[:m]
+        alive = mir.alive[:m]       # live view: release flips rows in place
+        tasks = mir.tasks
+        weakest = self.victim_policy == "weakest_set"
+        goods: dict[int, int] = {}      # per-request good-state counters,
+        sizes: dict[int, int] = {}      # built lazily per ranked candidate
+        preempted: list[Task] = []
+        # Grid horizon: the window plus the drift this loop's own preempt
+        # messages can cause (each pushes the re-derived window later by at
+        # most its own link slot) — covers long eviction chains without a
+        # rebuild, and a chain that outruns it just rebuilds.
+        drift = 64.0 * self.net.slot(self.net.msg.preempt)
+        grid = _HPWindowGrid(dev, t1, t2 + drift + 0.5 * (t2 - t1),
+                             ct1, ct2, alive)
+        while True:
+            fits = grid.fits_window(t1, t2, 1)
+            if fits is None:            # drifted past coverage: rebuild
+                grid = _HPWindowGrid(dev, t1, t2 + drift + 0.5 * (t2 - t1),
+                                     ct1, ct2, alive)
+                fits = grid.fits_window(t1, t2, 1)
+            if fits:
+                break
+            cand = np.flatnonzero(alive & (ct1 < t2 - EPS)
+                                  & (t1 < ct2 - EPS))
+            if cand.size == 0:
+                break
+            # victim-key columns for the masked rows only; ``cand`` is
+            # ascending, so a first-tie argmin lands on the lowest row
+            # index — exactly min()'s tie-break over dict iteration order
+            dl = np.fromiter((tasks[i].deadline for i in cand),
+                             np.float64, cand.size)
+            if weakest:
+                health = np.fromiter(
+                    (self._cand_health(tasks[i], goods, sizes)
+                     for i in cand),
+                    np.float64, cand.size)
+                k = rank_victims(np.ones(cand.size, dtype=bool), dl, health)
+            else:
+                # first max deadline == min() over (-deadline,) tuples with
+                # its first-tie break (np.argmax keeps the first maximum)
+                k = int(np.argmax(dl))
+            idx = int(cand[k])
+            victim = tasks[idx]
+            vt1, vt2 = float(ct1[idx]), float(ct2[idx])
+            vamt = int(camt[idx])
+            was_good = victim.state in GOOD_STATES
+            self._preempt_victim(dev, victim, vamt, now)   # flips alive[idx]
+            preempted.append(victim)
+            if weakest and was_good and victim.request_id in goods:
+                # the eviction moved the victim out of its set's good
+                # states; its still-candidate siblings weaken accordingly
+                goods[victim.request_id] -= 1
+            grid.evict(vt1, vt2, vamt)
+            plan = placement()          # link moved; re-derive the window
+            if plan is None:
+                return None, preempted
+            msg_t1, t1, t2 = plan
+        return plan, preempted
+
+    def _cand_health(self, task: Task, goods: dict, sizes: dict) -> float:
+        """`_set_health` backed by the eviction loop's incremental
+        per-request counters (identical fractions: same integer numerator
+        and denominator as the scalar scan)."""
+        rid = task.request_id
+        if rid is None:
+            return 1.0
+        if rid not in goods:
+            req = self._requests.get(rid)
+            if req is None or not req.tasks:
+                return 1.0
+            goods[rid] = sum(1 for t in req.tasks if t.state in GOOD_STATES)
+            sizes[rid] = len(req.tasks)
+        return goods[rid] / sizes[rid]
+
+    def _reallocate_victims(self, victims: list[Task],
+                            now: float) -> list[Allocation]:
+        """Batch victim reallocation: every evicted LP task gets one
+        placement attempt before its own deadline (success -> ALLOCATED,
+        else FAILED), all sharing ONE placement context so same-type
+        victims reuse the probe plane's link windows and feasibility scan
+        (a commit invalidates the memo, exactly like the LP sweep — the
+        decisions are identical to N independent `_allocate_lp_task`
+        calls).  Runs on BOTH outcomes of the HP admission; running it on
+        the failure path too is the PR 5 stranded-victim bugfix."""
+        if not victims:
+            return []
         reallocs: list[Allocation] = []
-        for victim in preempted:
+        ctx: dict = {}
+        for victim in victims:
             r_wall = _time.perf_counter()
-            re = self._allocate_lp_task(victim, now, victim.deadline)
+            re = self._allocate_lp_task(victim, now, victim.deadline, ctx)
             self.metrics.t_realloc.append(_time.perf_counter() - r_wall)
             if re is not None:
                 victim.state = TaskState.ALLOCATED
@@ -264,14 +518,12 @@ class PreemptionAwareScheduler:
             else:
                 victim.state = TaskState.FAILED
                 self.metrics.realloc_failure += 1
-        return HPResult(True, alloc, preempted, reallocs)
+        return reallocs
 
     def _victim_key(self, r: Reservation):
-        """Smaller = preferred victim (used with min())."""
-        task: Task = r.tag
-        if self.victim_policy == "weakest_set":
-            return (self._set_health(task), -task.deadline)
-        return (-task.deadline,)
+        """Smaller = preferred victim (used with min()); the shared scalar
+        rule from core/victims.py over this reservation's task."""
+        return victim_sort_key(r.tag, self.victim_policy, self._set_health)
 
     def _set_health(self, task: Task) -> float:
         """Fraction of the task's request set still on track to complete."""
@@ -279,11 +531,7 @@ class PreemptionAwareScheduler:
                if task.request_id is not None else None)
         if req is None or not req.tasks:
             return 1.0
-        good = sum(
-            1 for t in req.tasks
-            if t.state in (TaskState.COMPLETED, TaskState.ALLOCATED,
-                           TaskState.RUNNING)
-        )
+        good = sum(1 for t in req.tasks if t.state in GOOD_STATES)
         return good / len(req.tasks)
 
     def _commit_hp(

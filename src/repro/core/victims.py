@@ -1,0 +1,79 @@
+"""Victim selection shared by the preemption mechanism and the baselines.
+
+Every discipline that preempts — the paper's scheduler (§4) and the
+workstealer baselines (§8 "rash" processor sharing) — ranks candidate
+victims by the same two policies:
+
+* ``farthest_deadline``  the paper's rule: evict the conflicting LP task
+                         whose deadline is farthest away (it has the most
+                         slack to be reallocated elsewhere).
+* ``weakest_set``        the §8 future-work proposal: prefer the victim
+                         whose request set is least likely to complete
+                         anyway (fewest healthy siblings), tie-break by
+                         farthest deadline.
+
+Two equivalent forms live here so the scalar disciplines and the
+vectorized preemption plane provably agree:
+
+* :func:`victim_sort_key` / :func:`select_victim` — the scalar rule; a
+  smaller key is a more preferred victim, and ``min()`` keeps the FIRST
+  minimum in iteration order (dict insertion order for the calendars, the
+  running-dict order for the workstealers).
+* :func:`rank_victims` — the one-pass vectorized equivalent over stacked
+  candidate columns.  ``np.argmin`` also returns the first minimum, so as
+  long as rows are stored in the same iteration order the two forms pick
+  bit-identical victims (tests/test_preemption_plane.py fuzzes this).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Optional
+
+import numpy as np
+
+from .task import Task, TaskState
+
+#: Task states that count as "on track" for a request set's health (the
+#: numerator of ``weakest_set``'s set-health fraction).
+GOOD_STATES = (TaskState.COMPLETED, TaskState.ALLOCATED, TaskState.RUNNING)
+
+
+def victim_sort_key(
+    task: Task, policy: str,
+    set_health: Optional[Callable[[Task], float]] = None,
+) -> tuple:
+    """Scalar victim key: smaller = preferred victim (used with min())."""
+    if policy == "weakest_set":
+        health = set_health(task) if set_health is not None else 1.0
+        return (health, -task.deadline)
+    return (-task.deadline,)
+
+
+def select_victim(
+    tasks: Iterable[Task], policy: str = "farthest_deadline",
+    set_health: Optional[Callable[[Task], float]] = None,
+) -> Task:
+    """Most-preferred victim; ties keep the FIRST candidate in iteration
+    order (``min()`` semantics — the contract the vectorized ranking
+    reproduces)."""
+    return min(tasks, key=lambda t: victim_sort_key(t, policy, set_health))
+
+
+def rank_victims(
+    mask: np.ndarray, deadlines: np.ndarray,
+    healths: Optional[np.ndarray] = None,
+) -> int:
+    """One-pass vectorized victim ranking over stacked candidate columns.
+
+    ``mask`` selects the live conflicting rows (must be non-empty);
+    ``deadlines`` is the per-row deadline column; ``healths`` the per-row
+    set-health column for ``weakest_set`` (None = ``farthest_deadline``).
+    Returns the row index of the victim, with exactly ``min()``'s
+    first-tie semantics: among the healthiest-tie rows (if any), the
+    farthest deadline wins, and remaining ties go to the LOWEST row index
+    (np.argmin returns the first minimum).
+    """
+    key = np.where(mask, -deadlines, np.inf)
+    if healths is not None:
+        h = np.where(mask, healths, np.inf)
+        key = np.where(h == h.min(), key, np.inf)
+    return int(np.argmin(key))

@@ -30,6 +30,7 @@ from .metrics import Metrics
 from .network import NetworkConfig
 from .policy import Decision, DecisionStatus, SchedulingPolicy, register_policy
 from .task import LowPriorityRequest, Priority, Task, TaskState
+from .victims import select_victim
 
 
 class _Run:
@@ -192,12 +193,14 @@ class WorkstealingPolicy(SchedulingPolicy):
     def decide_hp(self, task: Task, now: float) -> Decision:
         dev = self.devices[task.source_device]
         # Preemption: if starting the HP task would oversubscribe the device,
-        # evict the running LP task with the farthest deadline (work lost).
+        # evict the running LP task with the farthest deadline (work lost) —
+        # the same shared victim-scoring rule the calendar scheduler ranks
+        # its conflict candidates with (core/victims.py).
         preempted: list[Task] = []
         if self.preemption and dev.demand + 1 > dev.capacity:
             victims = [t for t in dev.running if t.priority == Priority.LOW]
             if victims:
-                victim = max(victims, key=lambda t: t.deadline)
+                victim = select_victim(victims, "farthest_deadline")
                 self._preempt(dev, victim)
                 preempted.append(victim)
         self._start(dev, task, cores=1)

@@ -19,6 +19,13 @@ Three arrival families (DESIGN.md §5.2):
                     same instant, immediately followed by the wave's LP sets;
                     maximises link contention and preemption pressure
                     (worst case for a shared single-AP network, paper §3).
+* ``preempt_storm`` — the preemption-adversarial family (DESIGN.md §12):
+                    a saturation phase packs every device with max-size LP
+                    sets, then synchronised HP-only bursts aim at the loaded
+                    devices every ``wave_period`` — each burst admission has
+                    to walk the eviction/reallocation path, which is what
+                    ``bench_preemption`` (benchmarks/scheduler_micro.py)
+                    measures across the 4 -> 1024 tier ladder.
 
 HP:LP mix sweeps ride on ``lp_fraction`` (the probability that an HP arrival
 spawns an LP set); ``sweep_mix`` builds the standard ratio ladder.
@@ -46,7 +53,7 @@ from ..core.profiles import PAPER_TYPE, get_workload, validate_workload_name
 from ..core.scheduler import PreemptionAwareScheduler
 from ..core.task import LowPriorityRequest, Priority, Task, reset_id_counters
 
-ARRIVAL_KINDS = ("poisson", "bursty", "adversarial")
+ARRIVAL_KINDS = ("poisson", "bursty", "adversarial", "preempt_storm")
 
 #: The standard device-count ladder.  The 1024 tier exists to exercise the
 #: vectorized probe plane (calendar.py) well past the paper's four devices —
@@ -131,6 +138,28 @@ def generate_arrivals(cfg: LargeNConfig) -> list[Arrival]:
                 out.append(Arrival(t, d, _lp_size(cfg, rng), pick_type()))
         return out
 
+    if cfg.arrival == "preempt_storm":
+        # Saturation phase: every device receives a jittered train of
+        # max-size LP sets inside the first wave period, filling its
+        # calendar.  Burst phases: synchronised HP-only arrivals at EVERY
+        # device — aimed exactly at the saturated calendars, so each one
+        # exercises eviction + victim reallocation.
+        sat_end = min(cfg.wave_period, cfg.duration)
+        for d in range(cfg.n_devices):
+            t = float(rng.uniform(0.0, 0.5 * sat_end))
+            while t < sat_end:
+                out.append(Arrival(t, d, max(cfg.lp_set_sizes), pick_type()))
+                t += float(rng.exponential(sat_end / 4.0))
+        n_waves = max(1, int((cfg.duration - sat_end) / cfg.wave_period))
+        for w in range(n_waves):
+            t = sat_end + w * cfg.wave_period
+            if t >= cfg.duration:   # every family stays inside [0, duration)
+                break
+            for d in range(cfg.n_devices):
+                out.append(Arrival(t, d, 0, pick_type()))
+        out.sort(key=lambda a: (a.t, a.device))
+        return out
+
     for d in range(cfg.n_devices):
         t = 0.0
         while True:
@@ -174,6 +203,7 @@ def run_large_n(
     *,
     batch_window: float = 0.0,
     preemption: bool = True,
+    preemption_plane: bool = True,
     state: Optional[object] = None,
 ) -> dict:
     """Drive the scheduler over the scenario's arrival stream, end to end.
@@ -182,7 +212,9 @@ def run_large_n(
     admits each buffer through ``allocate_low_priority_batch`` (the
     controller-side batching mode); ``0`` admits per request like the paper.
     ``state`` lets benchmarks substitute ``ReferenceNetworkState`` so old and
-    new calendars run the *same* workload.
+    new calendars run the *same* workload; ``preemption_plane=False`` forces
+    the scalar eviction loop (the preemption plane's differential
+    reference — ``bench_preemption`` runs both over identical storms).
 
     Returns a summary dict with admission counts and wall-clock admission
     latency statistics (microseconds per call).
@@ -194,7 +226,8 @@ def run_large_n(
     st = state if state is not None else NetworkState(cfg.n_devices)
     metrics = Metrics(cfg.name)
     sched = PreemptionAwareScheduler(st, net, preemption=preemption,
-                                    metrics=metrics)
+                                     metrics=metrics,
+                                     preemption_plane=preemption_plane)
     arrivals = generate_arrivals(cfg)
 
     hp_ok = hp_fail = lp_ok = lp_fail = 0
@@ -277,6 +310,10 @@ def run_large_n(
         "realloc_failure": metrics.realloc_failure,
         "hp_alloc_us_mean": _us_mean(hp_lat),
         "hp_alloc_us_p99": _us_pct(hp_lat, 99),
+        # preemption-path admissions only (the quantity bench_preemption
+        # compares between the vectorized plane and the scalar loop)
+        "hp_preempt_us_mean": _us_mean(metrics.t_hp_preempt),
+        "n_hp_preempt": len(metrics.t_hp_preempt),
         "lp_alloc_us_mean": _us_mean(metrics.t_lp_alloc),
         "lp_alloc_us_p99": _us_pct(metrics.t_lp_alloc, 99),
         "wall_s": wall,

@@ -1,0 +1,120 @@
+"""Checkpoint store durability + dtype-safety contract (PR 5 bugfixes):
+
+* ``restore`` must refuse a dtype mismatch (naming the leaf) instead of
+  silently ``astype``-ing — loading an integer step counter or bool mask
+  into a float reference corrupts it; ``cast=True`` opts in explicitly.
+* ``save`` must be atomic: an interrupted save can never leave a torn
+  checkpoint (new manifest + old arrays, or half-written payload).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+
+def tree():
+    return {
+        "w": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "step": np.asarray(7, dtype=np.int64),
+        "mask": np.asarray([True, False, True]),
+    }
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "ckpt")
+    store.save(path, tree(), {"note": "x"})
+    assert store.exists(path)
+    out = store.restore(path, tree())
+    assert out["w"].dtype == np.float32
+    np.testing.assert_array_equal(out["w"], tree()["w"])
+    np.testing.assert_array_equal(out["mask"], tree()["mask"])
+    assert store.load_metadata(path) == {"note": "x"}
+
+
+def test_restore_refuses_dtype_mismatch_naming_leaf(tmp_path):
+    path = str(tmp_path / "ckpt")
+    store.save(path, tree())
+    ref = tree()
+    ref["step"] = np.asarray(0.0, dtype=np.float64)   # int64 -> float64 ref
+    with pytest.raises(ValueError, match=r"\['step'\].*int64.*float64"):
+        store.restore(path, ref)
+
+
+def test_restore_cast_opt_in(tmp_path):
+    path = str(tmp_path / "ckpt")
+    store.save(path, tree())
+    ref = tree()
+    ref["step"] = np.asarray(0.0, dtype=np.float64)
+    out = store.restore(path, ref, cast=True)
+    assert out["step"].dtype == np.float64 and out["step"] == 7.0
+
+
+def test_restore_still_validates_shape(tmp_path):
+    path = str(tmp_path / "ckpt")
+    store.save(path, tree())
+    ref = tree()
+    ref["w"] = np.zeros((3, 2), dtype=np.float32)
+    with pytest.raises(ValueError, match=r"\['w'\].*shape"):
+        store.restore(path, ref)
+
+
+def test_save_overwrites_atomically(tmp_path):
+    path = str(tmp_path / "ckpt")
+    store.save(path, tree(), {"v": 1})
+    t2 = tree()
+    t2["w"] = t2["w"] + 1.0
+    store.save(path, t2, {"v": 2})
+    out = store.restore(path, tree())
+    np.testing.assert_array_equal(out["w"], tree()["w"] + 1.0)
+    assert store.load_metadata(path) == {"v": 2}
+    # no temp/backup litter left behind
+    leftovers = [p for p in os.listdir(tmp_path) if p != "ckpt"]
+    assert leftovers == []
+
+
+def test_failed_swap_rolls_previous_checkpoint_back(tmp_path, monkeypatch):
+    """If the final temp-dir -> path rename fails, the previous checkpoint
+    must be rolled back into place (path never stays empty on a
+    survivable error)."""
+    path = str(tmp_path / "ckpt")
+    store.save(path, tree(), {"v": 1})
+    real_replace = os.replace
+
+    def flaky_replace(src, dst):
+        if src.startswith(f"{path}.tmp."):
+            raise OSError("no rename for you")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(store.os, "replace", flaky_replace)
+    with pytest.raises(OSError, match="no rename"):
+        store.save(path, tree(), {"v": 2})
+    monkeypatch.undo()
+    assert store.exists(path)
+    assert store.load_metadata(path) == {"v": 1}
+    store.restore(path, tree())
+    # the next successful save clears any leftover litter
+    store.save(path, tree(), {"v": 3})
+    assert store.load_metadata(path) == {"v": 3}
+    assert [p for p in os.listdir(tmp_path) if p != "ckpt"] == []
+
+
+def test_interrupted_save_leaves_previous_checkpoint_intact(tmp_path,
+                                                            monkeypatch):
+    path = str(tmp_path / "ckpt")
+    store.save(path, tree(), {"v": 1})
+
+    def boom(*a, **k):
+        raise RuntimeError("disk full")
+
+    monkeypatch.setattr(store.np, "savez", boom)
+    with pytest.raises(RuntimeError, match="disk full"):
+        store.save(path, tree(), {"v": 2})
+    monkeypatch.undo()
+    # the previous checkpoint is fully readable; nothing torn, no litter
+    assert store.exists(path)
+    out = store.restore(path, tree())
+    np.testing.assert_array_equal(out["w"], tree()["w"])
+    assert store.load_metadata(path) == {"v": 1}
+    assert [p for p in os.listdir(tmp_path) if p != "ckpt"] == []

@@ -1,0 +1,272 @@
+"""The vectorized preemption plane must be bit-identical to the scalar
+eviction loop (DESIGN.md §12).
+
+Three layers of evidence:
+
+* a seeded differential fuzz suite: identical preemption-heavy workloads
+  (saturated devices, link jams that displace windows mid-loop, duplicate
+  deadlines for tie-breaks, partially-failed request sets for the
+  ``weakest_set`` health column) run through ``preemption_plane=True`` and
+  ``False``; every decision, metric and final calendar must match;
+* unit tests of the `_LPMirror` sync contract (insertion order, re-reserve
+  moves to the end, truncate/gc/compaction);
+* unit tests of the `_HPWindowGrid` refit: after every eviction its answer
+  must equal a fresh ``dev.fits`` probe.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.calendar import NetworkState, _LPMirror
+from repro.core.network import NetworkConfig
+from repro.core.scheduler import PreemptionAwareScheduler, _HPWindowGrid
+from repro.core.task import (
+    LowPriorityRequest,
+    Priority,
+    Task,
+    TaskState,
+    reset_id_counters,
+)
+from repro.core.victims import rank_victims, select_victim
+
+
+def lp_task(dev=0, deadline=30.0, frame=0):
+    return Task(priority=Priority.LOW, source_device=dev, deadline=deadline,
+                frame_id=frame)
+
+
+# --------------------------------------------------------------------- #
+# Differential fuzz: plane vs scalar over identical workloads           #
+# --------------------------------------------------------------------- #
+def _build(seed: int, policy: str, plane: bool):
+    reset_id_counters()
+    rng = random.Random(seed)
+    net = NetworkConfig()
+    st = NetworkState(4)
+    sched = PreemptionAwareScheduler(st, net, preemption=True,
+                                     victim_policy=policy,
+                                     preemption_plane=plane)
+    # preload LP reservations through request sets with mixed health;
+    # duplicate deadlines on purpose (tie-breaks must match min()'s)
+    for i in range(60):
+        req = LowPriorityRequest(source_device=rng.randrange(4),
+                                 deadline=rng.choice([20.0, 40.0, 40.0, 80.0]),
+                                 frame_id=i, n_tasks=rng.randrange(1, 4))
+        req.make_tasks()
+        sched._requests[req.request_id] = req
+        for t in req.tasks:
+            if rng.random() < 0.3:
+                t.state = TaskState.FAILED      # weakens the set
+                continue
+            t1 = rng.uniform(0.0, 30.0)
+            t.state = TaskState.ALLOCATED
+            st.devices[rng.randrange(4)].reserve(
+                t1, t1 + rng.uniform(0.3, 20.0), rng.choice([2, 2, 4]), t)
+    # a link jam near t=0 so preempt messages displace the window mid-loop
+    st.link.reserve(0.05, 0.4, "jam")
+    return st, sched
+
+
+def _run(seed: int, policy: str, plane: bool):
+    st, sched = _build(seed, policy, plane)
+    rng = random.Random(seed + 999)
+    log = []
+    now = 0.0
+    for i in range(40):
+        now += rng.uniform(0.0, 1.5)
+        task = Task(priority=Priority.HIGH, source_device=rng.randrange(4),
+                    deadline=now + rng.choice([1.2, 2.0, 5.0]),
+                    frame_id=1000 + i, task_id=100000 + i)
+        res = sched.allocate_high_priority(task, now)
+        log.append((
+            res.success,
+            tuple(v.task_id for v in res.preempted),
+            tuple(v.state for v in res.preempted),
+            tuple((a.task.task_id, a.device, a.t_start, a.t_end, a.cores)
+                  for a in res.reallocations),
+            None if res.allocation is None
+            else (res.allocation.device, res.allocation.t_start),
+        ))
+    m = sched.metrics
+    log.append(("metrics", m.preemptions, dict(m.preempted_by_cores),
+                m.realloc_success, m.realloc_failure))
+    cal = [sorted((r.t1, r.t2, r.amount, str(r.tag))
+                  for r in d.reservations()) for d in st.devices]
+    cal.append(sorted((r.t1, r.t2, str(r.tag))
+                      for r in st.link.reservations()))
+    return log, cal
+
+
+@pytest.mark.parametrize("policy", ["farthest_deadline", "weakest_set"])
+@pytest.mark.parametrize("seed", range(12))
+def test_plane_matches_scalar_fuzz(policy, seed):
+    plane_log, plane_cal = _run(seed, policy, plane=True)
+    scalar_log, scalar_cal = _run(seed, policy, plane=False)
+    assert plane_log == scalar_log
+    assert plane_cal == scalar_cal
+
+
+def test_plane_flag_respected():
+    st = NetworkState(2)
+    sched = PreemptionAwareScheduler(st, NetworkConfig())
+    assert sched._preempt_plane
+    sched_off = PreemptionAwareScheduler(st, NetworkConfig(),
+                                         preemption_plane=False)
+    assert not sched_off._preempt_plane
+    # reference calendars have no mirror -> the plane silently disables
+    from repro.core.calendar_reference import ReferenceNetworkState
+    ref = PreemptionAwareScheduler(ReferenceNetworkState(2), NetworkConfig())
+    assert not ref._preempt_plane
+
+
+# --------------------------------------------------------------------- #
+# _LPMirror sync contract                                               #
+# --------------------------------------------------------------------- #
+def test_mirror_matches_reservation_dict_order():
+    st = NetworkState(1)
+    dev = st.devices[0]
+    tasks = [lp_task(frame=i) for i in range(5)]
+    for i, t in enumerate(tasks):
+        dev.reserve(float(i), float(i) + 10.0, 2, t)
+    dev.reserve(0.0, 50.0, 1, "not-a-task")            # never mirrored
+    hp = Task(priority=Priority.HIGH, source_device=0, deadline=9.0,
+              frame_id=99)
+    dev.reserve(0.0, 1.0, 1, hp)                       # HP: never mirrored
+    mir = dev.lp_mirror()
+
+    def live_rows():
+        return [mir.tasks[i].task_id
+                for i in range(mir.m) if mir.alive[i]]
+
+    def dict_lp_order():
+        return [r.tag.task_id for r in dev.reservations()
+                if _LPMirror.tracks(r.tag)]
+
+    assert live_rows() == dict_lp_order()
+    # release drops the row, preserving the others' order
+    dev.release(tasks[2])
+    assert live_rows() == dict_lp_order()
+    # re-reserve moves the tag to the END, exactly like the dict
+    dev.reserve(2.5, 12.5, 4, tasks[1])
+    assert live_rows() == dict_lp_order()
+    assert live_rows()[-1] == tasks[1].task_id
+    # truncate keeps the row but updates its t2 column
+    dev.truncate(tasks[3], 5.0)
+    row = mir.rows[tasks[3].task_id]
+    assert mir.t2[row] == 5.0
+    # truncate-to-start removes entirely
+    dev.truncate(tasks[4], 4.0 - 1e-6)
+    assert tasks[4].task_id not in mir.rows
+    assert live_rows() == dict_lp_order()
+    # gc retires expired rows (t2 <= now)
+    dev.gc(6.0)
+    assert live_rows() == dict_lp_order()
+
+
+def test_mirror_backfill_equals_incremental():
+    """A mirror built late (backfill) must equal one maintained from the
+    start by the mutation hooks."""
+    def populate(dev):
+        ts = [lp_task(frame=i, deadline=20.0 + i) for i in range(6)]
+        for i, t in enumerate(ts):
+            dev.reserve(float(i), float(i) + 8.0, 2, t)
+        dev.release(ts[0])
+        dev.reserve(1.5, 9.5, 4, ts[2])     # re-reserve -> moves to end
+        dev.truncate(ts[3], 4.0)
+        return ts
+
+    st_a = NetworkState(1)
+    st_a.devices[0].lp_mirror()             # built BEFORE any reservation
+    populate(st_a.devices[0])
+    reset_id_counters()
+    st_b = NetworkState(1)
+    populate(st_b.devices[0])               # mirror built only now
+
+    def rows(dev):
+        mir = dev.lp_mirror()
+        return [(mir.tasks[i].frame_id, mir.t1[i], mir.t2[i],
+                 int(mir.amount[i]))
+                for i in range(mir.m) if mir.alive[i]]
+
+    reset_id_counters()
+    assert rows(st_a.devices[0]) == rows(st_b.devices[0])
+
+
+def test_mirror_compaction_preserves_order():
+    st = NetworkState(1)
+    dev = st.devices[0]
+    mir = dev.lp_mirror()
+    tasks = [lp_task(frame=i) for i in range(120)]
+    for i, t in enumerate(tasks):
+        dev.reserve(float(i), float(i) + 5.0, 2, t)
+    for t in tasks[:80]:                    # kill enough to trigger compact
+        dev.release(t)
+    mir2 = dev.lp_mirror()                  # accessor runs compaction
+    assert mir2 is mir
+    assert mir.dead == 0 and mir.m == 40
+    assert [t.frame_id for t in mir.tasks] == list(range(80, 120))
+    assert bool(mir.alive[:40].all())
+
+
+# --------------------------------------------------------------------- #
+# _HPWindowGrid refit vs dev.fits                                       #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(8))
+def test_window_grid_matches_fits_after_evictions(seed):
+    rng = random.Random(seed)
+    st = NetworkState(1)
+    dev = st.devices[0]
+    tasks = []
+    for i in range(40):
+        t = lp_task(frame=i)
+        t1 = rng.uniform(0.0, 8.0)
+        dev.reserve(t1, t1 + rng.uniform(0.2, 4.0), rng.choice([1, 2, 4]), t)
+        tasks.append(t)
+    mir = dev.lp_mirror()
+    m = mir.m
+    t1, t2 = 2.0, 4.5
+    grid = _HPWindowGrid(dev, t1, t2 + 3.0, mir.t1[:m], mir.t2[:m],
+                         mir.alive[:m])
+    order = list(range(40))
+    rng.shuffle(order)
+    for step, k in enumerate(order[:25]):
+        row = mir.rows[tasks[k].task_id]
+        vt1, vt2 = float(mir.t1[row]), float(mir.t2[row])
+        vamt = int(mir.amount[row])
+        dev.release(tasks[k])
+        grid.evict(vt1, vt2, vamt)
+        # probe several windows inside the covered horizon, incl. drifted
+        for w1, w2 in ((t1, t2), (t1 + 0.3 * step % 1.0, t2 + 0.4),
+                       (t1 + 1.0, t2 + 2.0)):
+            for cores in (1, 2, 4):
+                got = grid.fits_window(w1, w2, cores)
+                assert got is not None
+                assert got == dev.fits(w1, w2, cores), (step, w1, w2, cores)
+    # out-of-coverage probe reports None (caller must rebuild)
+    assert grid.fits_window(t1, t2 + 4.0, 1) is None
+
+
+# --------------------------------------------------------------------- #
+# Shared victim helpers                                                 #
+# --------------------------------------------------------------------- #
+def test_rank_victims_matches_select_victim():
+    rng = random.Random(3)
+    for _ in range(50):
+        n = rng.randrange(1, 8)
+        tasks = [lp_task(frame=i, deadline=rng.choice([10.0, 20.0, 20.0, 30.0]))
+                 for i in range(n)]
+        healths = [rng.choice([0.25, 0.5, 1.0, 1.0]) for _ in range(n)]
+        by_id = {t.task_id: h for t, h in zip(tasks, healths)}
+        mask = np.ones(n, dtype=bool)
+        dl = np.fromiter((t.deadline for t in tasks), np.float64, n)
+        # farthest_deadline
+        got = tasks[rank_victims(mask, dl)]
+        want = select_victim(tasks, "farthest_deadline")
+        assert got is want
+        # weakest_set
+        h = np.fromiter(healths, np.float64, n)
+        got = tasks[rank_victims(mask, dl, h)]
+        want = select_victim(tasks, "weakest_set",
+                             set_health=lambda t: by_id[t.task_id])
+        assert got is want

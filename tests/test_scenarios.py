@@ -12,7 +12,8 @@ from repro.sim.scenarios import (
 )
 
 
-@pytest.mark.parametrize("family", ["poisson", "bursty", "adversarial"])
+@pytest.mark.parametrize("family", ["poisson", "bursty", "adversarial",
+                                    "preempt_storm"])
 def test_arrivals_deterministic_and_sorted(family):
     cfg = LargeNConfig(name="t", arrival=family, n_devices=8, duration=30.0,
                        seed=3)
@@ -37,6 +38,35 @@ def test_adversarial_waves_are_synchronised():
     assert times == [0.0, 5.0, 10.0, 15.0]
     for t in times:
         assert len([a for a in arrivals if a.t == t]) == 16
+
+
+def test_preempt_storm_shape():
+    """Saturation phase first (max-size LP sets at every device inside one
+    wave period), then synchronized HP-only waves at EVERY device — the
+    preemption-adversarial family bench_preemption runs across the tier
+    ladder."""
+    cfg = LargeNConfig(name="t", arrival="preempt_storm", n_devices=8,
+                       duration=20.0, wave_period=5.0, seed=2)
+    arrivals = generate_arrivals(cfg)
+    sat = [a for a in arrivals if a.t < 5.0]
+    waves = [a for a in arrivals if a.t >= 5.0]
+    assert sat and waves
+    assert all(a.n_lp_tasks == max(cfg.lp_set_sizes) for a in sat)
+    assert {a.device for a in sat} == set(range(8))
+    assert all(a.n_lp_tasks == 0 for a in waves)
+    wave_times = sorted({a.t for a in waves})
+    assert wave_times == [5.0, 10.0, 15.0]
+    for t in wave_times:
+        assert len([a for a in waves if a.t == t]) == 8
+
+
+def test_preempt_storm_runs_and_preempts():
+    s = run_large_n(LargeNConfig(name="t", arrival="preempt_storm",
+                                 n_devices=8, duration=16.0, seed=1))
+    assert s["preemptions"] > 0
+    assert s["n_hp_preempt"] > 0
+    # the bugfix's accounting invariant: every preemption is settled
+    assert s["realloc_success"] + s["realloc_failure"] == s["preemptions"]
 
 
 def test_mix_sweep_controls_lp_volume():

@@ -1,0 +1,231 @@
+"""The full victim lifecycle, across both victim policies and both
+eviction paths (vectorized plane / scalar reference):
+
+* preempt -> reallocation success (victim re-enters ALLOCATED elsewhere),
+* preempt -> reallocation failure (victim FAILED, counted),
+* preempt -> the HP admission itself fails (the PR 5 stranded-victim
+  bugfix: victims must STILL get the reallocation pass),
+
+including link-slot cancellation and the ``preempt_count`` /
+``preempted_by_cores`` accounting.
+"""
+import pytest
+
+from repro.core.calendar import NetworkState
+from repro.core.network import NetworkConfig
+from repro.core.scheduler import PreemptionAwareScheduler
+from repro.core.task import LowPriorityRequest, Priority, Task, TaskState
+
+PARAMS = [(pol, plane) for pol in ("farthest_deadline", "weakest_set")
+          for plane in (True, False)]
+
+
+def make(n_devices=2, policy="farthest_deadline", plane=True):
+    state = NetworkState(n_devices)
+    net = NetworkConfig()
+    sched = PreemptionAwareScheduler(state, net, preemption=True,
+                                     victim_policy=policy,
+                                     preemption_plane=plane)
+    return state, net, sched
+
+
+def hp_task(dev=0, deadline=3.0, frame=0):
+    return Task(priority=Priority.HIGH, source_device=dev, deadline=deadline,
+                frame_id=frame)
+
+
+def admitted_lp(sched, dev=0, deadline=60.0, frame=0):
+    """One LP task admitted through the scheduler (so it owns link slots)."""
+    req = LowPriorityRequest(source_device=dev, deadline=deadline,
+                             frame_id=frame, n_tasks=1)
+    req.make_tasks()
+    res = sched.allocate_low_priority(req, 0.0)
+    assert len(res.allocations) == 1
+    return req.tasks[0], res.allocations[0]
+
+
+def link_tags(state):
+    return [s.tag for s in state.link.reservations()]
+
+
+@pytest.mark.parametrize("policy,plane", PARAMS)
+def test_preempt_then_realloc_success(policy, plane):
+    state, net, sched = make(3, policy, plane)
+    # fill the source device so the victim's request offloads to device 1;
+    # device 2 stays free as the reallocation target
+    blocker = Task(priority=Priority.LOW, source_device=0, deadline=200.0,
+                   frame_id=9)
+    state.devices[0].reserve(0.0, 100.0, 4, blocker)
+    filler2 = Task(priority=Priority.LOW, source_device=2, deadline=200.0,
+                   frame_id=7)
+    state.devices[2].reserve(0.0, 100.0, 2, filler2)   # keep dev1 least-loaded
+    victim, alloc = admitted_lp(sched, dev=0, deadline=60.0)
+    assert alloc.offloaded and alloc.device == 1
+    assert ("xfer", victim.task_id) in link_tags(state)
+    # saturate device 1's remaining cores over the victim's slot
+    filler = Task(priority=Priority.LOW, source_device=1, deadline=55.0,
+                  frame_id=8)
+    state.devices[1].reserve(alloc.t_start, alloc.t_end, 2, filler)
+
+    res = sched.allocate_high_priority(hp_task(dev=1), 0.0)
+    assert res.success and victim in res.preempted
+    assert victim.state == TaskState.ALLOCATED      # reallocated in time
+    assert victim.preempt_count == 1
+    assert sched.metrics.preemptions >= 1
+    assert sched.metrics.preempted_by_cores[alloc.cores] >= 1
+    assert sched.metrics.realloc_success >= 1
+    # stale pending link traffic cancelled, replacement slots recorded
+    tags = link_tags(state)
+    assert ("xfer", victim.task_id) not in tags or \
+        any(r.task is victim for r in res.reallocations)
+    assert any(r.task is victim for r in res.reallocations)
+    new_alloc = next(r for r in res.reallocations if r.task is victim)
+    assert new_alloc.t_end <= victim.deadline
+    assert ("update", victim.task_id) in tags
+
+
+@pytest.mark.parametrize("policy,plane", PARAMS)
+def test_preempt_then_realloc_failure(policy, plane):
+    state, net, sched = make(1, policy, plane)   # nowhere to offload
+    # two cores stay busy for a long horizon with NON-preemptable (HP)
+    # work, so after the eviction the new HP slot leaves no 2-core window
+    # for the victim
+    for i in range(2):
+        background = Task(priority=Priority.HIGH, source_device=0,
+                          deadline=200.0, frame_id=9 + i)
+        state.devices[0].reserve(0.0, 100.0, 1, background)
+    victim, alloc = admitted_lp(sched, dev=0, deadline=18.5)
+    assert not alloc.offloaded
+    hp = hp_task(dev=0, deadline=3.0)
+    res = sched.allocate_high_priority(hp, 0.0)
+    assert res.success and victim in res.preempted
+    assert victim.state == TaskState.FAILED
+    assert sched.metrics.realloc_failure == 1
+    assert sched.metrics.realloc_success == 0
+    assert not res.reallocations
+    # no pending link traffic left for the dead victim
+    assert ("update", victim.task_id) not in link_tags(state)
+
+
+@pytest.mark.parametrize("policy,plane", PARAMS)
+def test_failed_hp_admission_still_reallocates_victims(policy, plane):
+    """The stranded-victim regression (PR 5 headline bugfix): when the HP
+    admission fails AFTER evicting victims — here the preempt message eats
+    the only early link gap, pushing the re-derived window past the HP
+    deadline — the victims must still get the reallocation pass instead of
+    being left in PREEMPTED forever."""
+    state, net, sched = make(2, policy, plane)
+    msg_dur = net.slot(net.msg.hp_alloc)
+    pre_dur = net.slot(net.msg.preempt)
+    # link: free gap fits ONE hp_alloc message, then jammed until t=5
+    gap = msg_dur + 0.5 * pre_dur
+    state.link.reserve(gap, 5.0, "jam")
+    # the victim holds all four cores of device 0 over the HP window
+    victim = Task(priority=Priority.LOW, source_device=0, deadline=40.0,
+                  frame_id=1)
+    victim.state = TaskState.ALLOCATED
+    state.devices[0].reserve(0.0, 15.0, 4, victim)
+
+    hp = hp_task(dev=0, deadline=1.5)
+    res = sched.allocate_high_priority(hp, 0.0)
+    # the eviction happened, then the re-derived window missed the deadline
+    assert not res.success
+    assert res.preempted == [victim]
+    assert victim.preempt_count == 1
+    # THE FIX: the victim is not stranded in PREEMPTED — it got a
+    # reallocation attempt before its own (still-far) deadline
+    assert victim.state == TaskState.ALLOCATED
+    assert sched.metrics.realloc_success == 1
+    assert len(res.reallocations) == 1
+    new_alloc = res.reallocations[0]
+    assert new_alloc.task is victim
+    assert new_alloc.t_end <= victim.deadline
+
+
+@pytest.mark.parametrize("policy,plane", PARAMS)
+def test_failed_hp_admission_realloc_failure_counted(policy, plane):
+    """Same stranded scenario, but the victim's own deadline is too tight
+    to re-place: it must transition to FAILED (not PREEMPTED) and count as
+    a reallocation failure."""
+    state, net, sched = make(1, policy, plane)
+    msg_dur = net.slot(net.msg.hp_alloc)
+    pre_dur = net.slot(net.msg.preempt)
+    state.link.reserve(msg_dur + 0.5 * pre_dur, 5.0, "jam")
+    victim = Task(priority=Priority.LOW, source_device=0, deadline=16.0,
+                  frame_id=1)
+    victim.state = TaskState.ALLOCATED
+    state.devices[0].reserve(0.0, 15.0, 4, victim)
+
+    res = sched.allocate_high_priority(hp_task(dev=0, deadline=1.5), 0.0)
+    assert not res.success
+    assert res.preempted == [victim]
+    assert victim.state == TaskState.FAILED
+    assert sched.metrics.realloc_failure == 1
+    assert not res.reallocations
+
+
+@pytest.mark.parametrize("policy,plane", PARAMS)
+def test_failed_hp_admission_nonlp_blockers(policy, plane):
+    """The OTHER failed-after-preemption path: every conflicting LP task
+    was evicted but non-preemptable HP reservations still block the
+    window.  Victims must get the reallocation pass here too."""
+    state, net, sched = make(2, policy, plane)
+    dev = state.devices[0]
+    # four HP reservations saturate the early part of every candidate
+    # window for a long horizon
+    for i in range(4):
+        blocker = Task(priority=Priority.HIGH, source_device=0,
+                       deadline=50.0, frame_id=10 + i)
+        dev.reserve(0.0, 30.0, 1, blocker)
+    # an LP victim also overlaps the window (over-subscribed on purpose;
+    # reserve() does not admission-check)
+    victim = Task(priority=Priority.LOW, source_device=0, deadline=40.0,
+                  frame_id=1)
+    victim.state = TaskState.ALLOCATED
+    dev.reserve(0.0, 15.0, 2, victim)
+
+    res = sched.allocate_high_priority(hp_task(dev=0, deadline=2.0), 0.0)
+    assert not res.success
+    assert res.preempted == [victim]
+    # reallocated on the idle device 1 before its deadline
+    assert victim.state == TaskState.ALLOCATED
+    assert sched.metrics.realloc_success == 1
+    assert len(res.reallocations) == 1 and res.reallocations[0].offloaded
+
+
+@pytest.mark.parametrize("plane", [True, False])
+def test_weakest_set_health_updates_during_eviction_chain(plane):
+    """Two conflicting victims from the SAME request: after the first
+    eviction the sibling's set health drops, which must be visible to the
+    next ranking round — on both eviction paths (the plane maintains the
+    health column incrementally)."""
+    state, net, sched = make(1, "weakest_set", plane)
+    dev = state.devices[0]
+    # request A: 2 tasks, both on this device, farther deadlines
+    req_a = LowPriorityRequest(source_device=0, deadline=90.0, frame_id=1,
+                               n_tasks=2)
+    req_a.make_tasks()
+    # request B: 2 tasks, one healthy here, one sibling healthy elsewhere,
+    # nearer deadline
+    req_b = LowPriorityRequest(source_device=0, deadline=80.0, frame_id=2,
+                               n_tasks=2)
+    req_b.make_tasks()
+    sched._requests[req_a.request_id] = req_a
+    sched._requests[req_b.request_id] = req_b
+    for t in req_a.tasks + req_b.tasks:
+        t.state = TaskState.ALLOCATED
+    # dev: A0 + A1 + B0 hold 2 cores each over the window (6/4 —
+    # over-subscribed on purpose; two evictions needed before 1 core fits)
+    dev.reserve(0.0, 50.0, 2, req_a.tasks[0])
+    dev.reserve(0.0, 50.0, 2, req_a.tasks[1])
+    dev.reserve(0.0, 50.0, 2, req_b.tasks[0])
+
+    res = sched.allocate_high_priority(hp_task(dev=0, deadline=3.0), 0.0)
+    assert res.success
+    # round 1: all healths are 1.0 -> farthest deadline wins (A, 90.0);
+    # round 2: A's health fell to 1/2 < B's 1.0 -> the A sibling goes next,
+    # NOT the nearer-deadline B task
+    assert [t.request_id for t in res.preempted[:2]] == \
+        [req_a.request_id, req_a.request_id]
+    assert req_b.tasks[0].state == TaskState.ALLOCATED  # kept its slot...
+    assert state.devices[0].get(req_b.tasks[0]) is not None
