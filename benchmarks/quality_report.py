@@ -1,0 +1,248 @@
+"""Decision-quality report: competitive ratios of every policy vs the oracle.
+
+The perf benchmarks (scheduler_micro.py) gate *speed*; this module gates
+*scheduling quality* the same way.  Every registered policy replays the
+golden scenario matrix (``SCENARIOS`` + ``MIXED_SCENARIOS`` at a reduced
+frame count, plus two small large-N tiers) and is scored against the
+``oracle`` policy (core/oracle.py) run end-to-end on the SAME scenario:
+
+* ``hp_completion_ratio``     — HP completion %, policy / oracle
+* ``frame_completion_ratio``  — frames fully completed %, policy / oracle
+* ``goodput_ratio``           — accuracy-weighted LP goodput, policy / oracle
+                                (profile accuracies weight each completed LP
+                                task; the paper workload is all-1.0, the
+                                mixed_edge profiles are not)
+
+The oracle is *per-decision* optimal, non-preemptive and non-clairvoyant
+(DESIGN.md §13) — so ratios are a calibrated yardstick, NOT bounded by 1.0:
+the preemption-aware scheduler legitimately beats the oracle's HP completion
+because it can evict LP work the oracle must schedule around.  What the gate
+pins is that the paper scheduler's measured ratios never silently regress.
+
+Everything is seeded and deterministic, so the committed capture
+(``QUALITY_6.json``) reproduces exactly on any machine; the gate margin only
+absorbs environment drift (numpy versions etc.), not noise.
+
+Runs are deduplicated by their effective configuration: WPS_4 / DPW / CPW
+share (trace, preemption, workload, devices, seed), so each policy runs that
+base once.  The oracle likewise ignores preemption and victim policy, so one
+oracle run serves every scenario sharing its base.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/quality_report.py                 # table
+    PYTHONPATH=src python benchmarks/quality_report.py --json QUALITY_6.json
+    PYTHONPATH=src python benchmarks/quality_report.py --quick \\
+        --gate QUALITY_6.json                                          # CI
+
+``--json`` captures BOTH tiers (quick + full) and pins per-scenario gate
+floors at ``measured - margin`` for the gated policy.  ``--gate`` replays
+the selected tier and fails (exit 1) if any gated ratio lands below its
+pinned floor.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import replace
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.policy import registered_policies          # noqa: E402
+from repro.core.profiles import get_workload               # noqa: E402
+from repro.core.task import TaskState                      # noqa: E402
+from repro.sim.experiment import (                         # noqa: E402
+    MIXED_SCENARIOS,
+    SCENARIOS,
+    Runtime,
+    ScenarioConfig,
+)
+
+#: The policy whose ratios the CI gate pins (the paper's scheduler).
+GATED_POLICY = "scheduler"
+#: Ratios the gate enforces (goodput rides along as a report column).
+GATED_METRICS = ("hp_completion_ratio", "frame_completion_ratio")
+#: Floor = measured - MARGIN.  Runs are deterministic; the margin absorbs
+#: cross-environment drift only.
+MARGIN = 0.05
+
+#: Small large-N tiers: the golden matrix stops at the paper's 4 devices;
+#: these keep the ratio report honest about fleet-size effects without
+#: turning the oracle into the bottleneck.
+LARGE_N_SCENARIOS: dict[str, ScenarioConfig] = {
+    "LN8": ScenarioConfig("LN8", "uniform", "scheduler", True,
+                          n_devices=8, seed=13),
+    "LN16": ScenarioConfig("LN16", "weighted_2", "scheduler", True,
+                           n_devices=16, seed=13),
+}
+
+ALL_SCENARIOS: dict[str, ScenarioConfig] = {
+    **SCENARIOS, **MIXED_SCENARIOS, **LARGE_N_SCENARIOS,
+}
+
+TIERS = {"quick": 20, "full": 40}            # n_frames per tier
+
+
+def _run_key(cfg: ScenarioConfig, policy: str, n_frames: int) -> tuple:
+    """Effective-configuration key — collapses scenarios that differ only
+    in their (replaced) algorithm.  The oracle additionally ignores
+    preemption and victim selection."""
+    if policy == "oracle":
+        return (policy, cfg.trace, cfg.workload, cfg.n_devices, cfg.seed,
+                n_frames)
+    return (policy, cfg.trace, cfg.workload, cfg.n_devices, cfg.seed,
+            n_frames, cfg.preemption, cfg.victim_policy, cfg.lp_batch_window)
+
+
+def _measure(cfg: ScenarioConfig, policy: str, n_frames: int) -> dict:
+    """One end-to-end run; absolute quality metrics."""
+    rt = Runtime(replace(cfg, name=f"q_{cfg.name}_{policy}",
+                         algorithm=policy, n_frames=n_frames))
+    rt.run()
+    s = rt.metrics.summary()
+    profiles = get_workload(cfg.workload).profiles
+    acc = {name: getattr(p, "accuracy", 1.0) for name, p in profiles.items()}
+    lp_tasks = [t for req in rt.requests for t in req.tasks]
+    total = sum(acc.get(t.task_type, 1.0) for t in lp_tasks)
+    good = sum(acc.get(t.task_type, 1.0) for t in lp_tasks
+               if t.state == TaskState.COMPLETED)
+    return {
+        "hp_completion_pct": s["hp_completion_pct"],
+        "frame_completion_pct": s["frame_completion_pct"],
+        "goodput_pct": 100.0 * good / total if total else 100.0,
+    }
+
+
+def _ratio(policy_val: float, oracle_val: float) -> float:
+    if oracle_val <= 0.0:
+        return 1.0 if policy_val <= 0.0 else float("inf")
+    return policy_val / oracle_val
+
+
+def run_tier(n_frames: int, cache: dict | None = None) -> dict[str, dict]:
+    """Per-scenario, per-policy ratio rows for one tier."""
+    cache = {} if cache is None else cache
+    policies = registered_policies()
+
+    def measured(cfg: ScenarioConfig, policy: str) -> dict:
+        key = _run_key(cfg, policy, n_frames)
+        if key not in cache:
+            cache[key] = _measure(cfg, policy, n_frames)
+        return cache[key]
+
+    report: dict[str, dict] = {}
+    for name, cfg in ALL_SCENARIOS.items():
+        oracle = measured(cfg, "oracle")
+        rows: dict[str, dict] = {}
+        for policy in policies:
+            m = measured(cfg, policy)
+            rows[policy] = {
+                "hp_completion_ratio": round(_ratio(
+                    m["hp_completion_pct"], oracle["hp_completion_pct"]), 6),
+                "frame_completion_ratio": round(_ratio(
+                    m["frame_completion_pct"],
+                    oracle["frame_completion_pct"]), 6),
+                "goodput_ratio": round(_ratio(
+                    m["goodput_pct"], oracle["goodput_pct"]), 6),
+            }
+        report[name] = {"oracle_abs": oracle, "policies": rows}
+    return report
+
+
+def floors_from(report: dict[str, dict]) -> dict[str, dict]:
+    return {
+        name: {
+            metric: round(entry["policies"][GATED_POLICY][metric] - MARGIN, 6)
+            for metric in GATED_METRICS
+        }
+        for name, entry in report.items()
+    }
+
+
+def print_table(report: dict[str, dict]) -> None:
+    policies = registered_policies()
+    head = f"{'scenario':<12}{'metric':<24}" + "".join(
+        f"{p:>14}" for p in policies)
+    print(head)
+    print("-" * len(head))
+    for name, entry in report.items():
+        for metric in ("hp_completion_ratio", "frame_completion_ratio",
+                       "goodput_ratio"):
+            row = "".join(f"{entry['policies'][p][metric]:>14.3f}"
+                          for p in policies)
+            print(f"{name:<12}{metric:<24}{row}")
+
+
+def gate(report: dict[str, dict], floors: dict[str, dict]) -> list[str]:
+    """Compare the gated policy's ratios against the pinned floors."""
+    failures: list[str] = []
+    for name, metric_floors in floors.items():
+        if name not in report:
+            failures.append(f"{name}: scenario missing from this run")
+            continue
+        rows = report[name]["policies"][GATED_POLICY]
+        for metric, floor in metric_floors.items():
+            got = rows[metric]
+            status = "ok" if got >= floor else "REGRESSION"
+            print(f"  {name}.{metric}: {got:.3f} (floor {floor:.3f}) {status}")
+            if got < floor:
+                failures.append(
+                    f"{name}.{metric}: {got:.3f} below floor {floor:.3f}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="run the quick tier only (CI smoke)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="capture the report (+ gate floors) to PATH")
+    ap.add_argument("--gate", metavar="PATH",
+                    help="check the gated policy's ratios against the "
+                         "floors pinned in PATH; exit 1 on regression")
+    args = ap.parse_args(argv)
+
+    cache: dict = {}
+    tiers = ("quick",) if args.quick else (("quick", "full")
+                                           if args.json else ("full",))
+    reports = {t: run_tier(TIERS[t], cache) for t in tiers}
+    for tier in tiers:
+        print(f"== tier {tier} (n_frames={TIERS[tier]}) ==")
+        print_table(reports[tier])
+
+    if args.json:
+        payload = {
+            "meta": {
+                "gated_policy": GATED_POLICY,
+                "gated_metrics": list(GATED_METRICS),
+                "margin": MARGIN,
+                "tiers": {t: TIERS[t] for t in tiers},
+            },
+            "reports": reports,
+            "floors": {t: floors_from(reports[t]) for t in tiers},
+        }
+        Path(args.json).write_text(json.dumps(payload, indent=1,
+                                              sort_keys=True) + "\n")
+        print(f"wrote {args.json}")
+
+    if args.gate:
+        pinned = json.loads(Path(args.gate).read_text())
+        tier = "quick" if args.quick else "full"
+        if tier not in pinned["floors"]:
+            print(f"no '{tier}' floors in {args.gate}", file=sys.stderr)
+            return 1
+        print(f"== quality gate ({tier}, policy={GATED_POLICY}) ==")
+        failures = gate(reports[tier], pinned["floors"][tier])
+        if failures:
+            print(f"QUALITY GATE FAILED ({len(failures)}):", file=sys.stderr)
+            for f in failures:
+                print(f"  {f}", file=sys.stderr)
+            return 1
+        print("quality gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

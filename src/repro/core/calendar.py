@@ -461,6 +461,14 @@ class LinkCalendar:
         """Earliest t >= not_before such that [t, t+duration) is free."""
         return self._sky.first_fit(duration, not_before, 0)
 
+    def usage_segments(self, t1: float, t2: float) -> tuple[np.ndarray, np.ndarray]:
+        """Raw link-occupancy segments over [t1, t2) as ``(starts, vals)``
+        arrays — NO EPS shrink, same contract as
+        :meth:`DeviceCalendar.usage_segments`.  Zero-valued segments are
+        free link time; the placement oracle (core/oracle.py) reads these
+        to price transfer feasibility."""
+        return self._sky.window_profile(t1, t2)
+
     def reserve(self, t1: float, t2: float, tag: object = None) -> Reservation:
         r = Reservation(t1, t2, 1, tag)
         idx = bisect_left(self._starts, t1)

@@ -31,6 +31,7 @@ class Metrics:
     lp_allocated: int = 0
     lp_completed: int = 0
     lp_failed_alloc: int = 0
+    lp_failed_runtime: int = 0
     lp_offloaded: int = 0
     lp_offloaded_completed: int = 0
     lp_requests_total: int = 0
@@ -78,6 +79,15 @@ class Metrics:
                 self.pct(self.frames_completed, self.frames_total), 2
             ),
             "hp_generated": self.hp_generated,
+            # Raw terminal-outcome counts: together with the ``realloc_*``
+            # pair below they partition the generated task set (asserted
+            # per scenario x policy by tests/test_accounting_invariants.py).
+            "hp_completed": self.hp_completed,
+            "hp_failed_alloc": self.hp_failed_alloc,
+            "hp_failed_runtime": self.hp_failed_runtime,
+            "lp_completed": self.lp_completed,
+            "lp_failed_alloc": self.lp_failed_alloc,
+            "lp_failed_runtime": self.lp_failed_runtime,
             "hp_completion_pct": round(self.pct(self.hp_completed, self.hp_generated), 2),
             "hp_via_preemption_pct": round(
                 self.pct(self.hp_completed_via_preemption, self.hp_generated), 2

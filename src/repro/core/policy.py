@@ -408,8 +408,12 @@ class PolicyDispatcher:
         self._exec_events.pop(task, None)
         task.state = TaskState.VIOLATED
         self.policy.on_violate(task, self.q.now)
+        prefix = "hp" if task.priority == Priority.HIGH else "lp"
+        self.metrics.count_type(task.task_type, f"{prefix}_failed_runtime")
         if task.priority == Priority.HIGH:
             self.metrics.hp_failed_runtime += 1
+        else:
+            self.metrics.lp_failed_runtime += 1
 
     def _start_exact(self, alloc: Allocation) -> None:
         task = alloc.task
@@ -466,6 +470,8 @@ class PolicyDispatcher:
             if task.offloaded:
                 m.lp_offloaded_completed += 1
             self.client.on_lp_complete(task)
+        else:
+            m.lp_failed_runtime += 1
 
     def finalize(self) -> None:
         self.policy.finalize(self.q.now)
@@ -670,3 +676,5 @@ class EDFOnlyPolicy(CalendarPolicy):
 # Workstealer baselines register themselves on import (kept in their own
 # module: they bring a processor-sharing execution model with them).
 from . import workstealer as _workstealer  # noqa: E402,F401  (registration)
+# The offline optimal-placement oracle (quality reference, DESIGN.md §13).
+from . import oracle as _oracle  # noqa: E402,F401  (registration)

@@ -56,6 +56,10 @@ class TaskProfile:
     output_bytes: int = 550              # completion state-update size
     hp_deadline_slack: float = 0.45      # HP deadline beyond detect+proc
     lp_deadline: Optional[float] = None  # per-type relative LP deadline
+    #: Benchmarked model accuracy in (0, 1] — weights the oracle's goodput
+    #: tiebreak and the quality report's accuracy-weighted goodput metric.
+    #: The paper's single-model world keeps the neutral 1.0.
+    accuracy: float = 1.0
 
     def __post_init__(self) -> None:
         if not self.lp_exec:
@@ -344,6 +348,7 @@ def _mixed_edge() -> WorkloadSpec:
         input_bytes=9200, output_bytes=550,
         hp_deadline_slack=0.30,
         lp_deadline=12.5,                 # tighter than the 18.86 s frame
+        accuracy=0.81,                    # light model: cheaper but weaker
     )
     detr = TaskProfile(
         name="detr_heavy",
@@ -353,6 +358,7 @@ def _mixed_edge() -> WorkloadSpec:
         input_bytes=64500, output_bytes=1100,
         hp_deadline_slack=0.70,
         lp_deadline=42.0,                 # looser: batch-analytics tier
+        accuracy=0.94,                    # heavy head: strongest model
     )
     return WorkloadSpec(
         name="mixed_edge",

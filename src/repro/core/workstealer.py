@@ -183,8 +183,13 @@ class WorkstealingPolicy(SchedulingPolicy):
         self._committed[dev.idx] -= run.cores
         task.state = TaskState.FAILED
         if task in self._preempt_pending:
+            # A re-stolen victim killed late: its reallocation failed to
+            # produce an on-time completion — one terminal bucket only.
             self._preempt_pending.discard(task)
             self.metrics.realloc_failure += 1
+        else:
+            self.metrics.lp_failed_runtime += 1
+            self.metrics.count_type(task.task_type, "lp_failed_runtime")
         self._kick(dev)
         self._kick_all()
         self._reschedule(dev)
@@ -238,10 +243,14 @@ class WorkstealingPolicy(SchedulingPolicy):
     def _complete(self, dev: _WSDevice, task: Task) -> None:
         late = self.host.q.now > task.deadline + 1e-9
         self.host.task_finished(task, late)
-        if task.priority == Priority.LOW and not late \
-                and task in self._preempt_pending:
+        # A finished task leaves preempt-pending either way: an on-time
+        # finish is a reallocation success, a late one already lands in
+        # lp_failed_runtime (leaving it pending would double-count it as a
+        # realloc_failure at finalize).
+        if task.priority == Priority.LOW and task in self._preempt_pending:
             self._preempt_pending.discard(task)
-            self.metrics.realloc_success += 1
+            if not late:
+                self.metrics.realloc_success += 1
 
     # -- stealing ---------------------------------------------------------- #
     def _kick_all(self) -> None:
@@ -277,6 +286,7 @@ class WorkstealingPolicy(SchedulingPolicy):
                     m.realloc_failure += 1
                 else:
                     m.lp_failed_alloc += 1
+                    m.count_type(task.task_type, "lp_failed_alloc")
                 continue
             host.lp_started(task, cores, dev.idx != task.source_device)
             if delay > 0:
@@ -334,14 +344,19 @@ class WorkstealingPolicy(SchedulingPolicy):
 
     def finalize(self, now: float) -> None:
         m = self.metrics
+        # Victims still awaiting a re-steal: their reallocation never
+        # happened.  Mark them terminal here (they also sit in a queue
+        # below, which must NOT count them again into lp_failed_alloc).
         for task in self._preempt_pending:
+            task.state = TaskState.FAILED
             m.realloc_failure += 1
         self._preempt_pending.clear()
         for q in [self.global_queue] + [d.queue for d in self.devices]:
             for task in q:
-                if task.state in (TaskState.PENDING, TaskState.PREEMPTED):
+                if task.state == TaskState.PENDING:
                     task.state = TaskState.FAILED
                     m.lp_failed_alloc += 1
+                    m.count_type(task.task_type, "lp_failed_alloc")
 
 
 @register_policy("central_ws")

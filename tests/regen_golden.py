@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Deterministic golden-scenario regeneration with a reviewable diff.
+
+``tests/data/golden_scenarios.json`` pins ``Metrics.summary()`` for every
+golden scenario (``SCENARIOS`` + ``MIXED_SCENARIOS`` at a reduced frame
+count).  When behaviour changes *intentionally* — new summary keys, an
+accounting fix — the goldens must be regenerated, and the regeneration
+must be reviewable: this helper replays every scenario, prints a
+structured per-scenario diff (added / removed / changed keys with old and
+new values), and rewrites the file.
+
+Usage::
+
+    PYTHONPATH=src python tests/regen_golden.py            # regen + diff
+    PYTHONPATH=src python tests/regen_golden.py --check    # diff only;
+                                                           # exit 1 on drift
+
+``--check`` never writes — it is the "would a regen change anything?"
+probe (useful before concluding a behaviour change is accounting-only).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import replace
+from pathlib import Path
+
+GOLDEN = Path(__file__).parent / "data" / "golden_scenarios.json"
+
+
+def _summary(metrics) -> dict:
+    """Deterministic slice of Metrics.summary() (drop wall-clock timings)."""
+    return {k: v for k, v in metrics.summary().items()
+            if not k.startswith("t_")}
+
+
+def compute_summaries(n_frames: int) -> dict[str, dict]:
+    """Replay every golden scenario at ``n_frames`` (import deferred so the
+    module is importable without PYTHONPATH side effects)."""
+    from repro.sim import run_scenario
+    from repro.sim.experiment import MIXED_SCENARIOS, SCENARIOS
+    scenarios = {**SCENARIOS, **MIXED_SCENARIOS}
+    return {
+        name: _summary(run_scenario(replace(cfg, n_frames=n_frames)))
+        for name, cfg in scenarios.items()
+    }
+
+
+def diff_summaries(old: dict[str, dict], new: dict[str, dict]) -> list[str]:
+    """Structured, line-per-change diff between two golden summary maps."""
+    lines: list[str] = []
+    for name in sorted(set(old) | set(new)):
+        if name not in old:
+            lines.append(f"+ scenario {name}: NEW ({len(new[name])} keys)")
+            continue
+        if name not in new:
+            lines.append(f"- scenario {name}: REMOVED")
+            continue
+        o, n = old[name], new[name]
+        for key in sorted(set(o) | set(n)):
+            if key not in o:
+                lines.append(f"  {name}.{key}: + {n[key]!r}")
+            elif key not in n:
+                lines.append(f"  {name}.{key}: - {o[key]!r}")
+            elif o[key] != n[key]:
+                lines.append(f"  {name}.{key}: {o[key]!r} -> {n[key]!r}")
+    return lines
+
+
+def regen(check_only: bool = False) -> int:
+    """Regenerate the goldens; returns the number of changed lines."""
+    data = json.loads(GOLDEN.read_text())
+    new = compute_summaries(data["n_frames"])
+    lines = diff_summaries(data.get("summaries", {}), new)
+    if lines:
+        header = ("golden drift (not written)" if check_only
+                  else "golden changes")
+        print(f"{header} — {len(lines)} line(s):")
+        for line in lines:
+            print(line)
+    else:
+        print("goldens unchanged")
+    if not check_only and lines:
+        data["summaries"] = new
+        GOLDEN.write_text(json.dumps(data, indent=1, sort_keys=True))
+        print(f"wrote {GOLDEN}")
+    return len(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="diff only; exit 1 when a regen would change "
+                         "the goldens, write nothing")
+    args = ap.parse_args(argv)
+    changed = regen(check_only=args.check)
+    return 1 if (args.check and changed) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,11 @@ Three layers of evidence:
   moves to the end, truncate/gc/compaction);
 * unit tests of the `_HPWindowGrid` refit: after every eviction its answer
   must equal a fresh ``dev.fits`` probe.
+
+Set ``REPRO_FUZZ_SEEDS=<k>`` to multiply the fuzz seed counts by ``k``
+(CI deep-fuzz; tier-1 defaults unchanged at ``k=1``).
 """
+import os
 import random
 
 import numpy as np
@@ -29,6 +33,9 @@ from repro.core.task import (
     reset_id_counters,
 )
 from repro.core.victims import rank_victims, select_victim
+
+#: Seed-count multiplier (REPRO_FUZZ_SEEDS env var; default x1 = tier-1).
+FUZZ_SCALE = max(1, int(os.environ.get("REPRO_FUZZ_SEEDS", "1") or "1"))
 
 
 def lp_task(dev=0, deadline=30.0, frame=0):
@@ -99,7 +106,7 @@ def _run(seed: int, policy: str, plane: bool):
 
 
 @pytest.mark.parametrize("policy", ["farthest_deadline", "weakest_set"])
-@pytest.mark.parametrize("seed", range(12))
+@pytest.mark.parametrize("seed", range(12 * FUZZ_SCALE))
 def test_plane_matches_scalar_fuzz(policy, seed):
     plane_log, plane_cal = _run(seed, policy, plane=True)
     scalar_log, scalar_cal = _run(seed, policy, plane=False)
@@ -212,7 +219,7 @@ def test_mirror_compaction_preserves_order():
 # --------------------------------------------------------------------- #
 # _HPWindowGrid refit vs dev.fits                                       #
 # --------------------------------------------------------------------- #
-@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("seed", range(8 * FUZZ_SCALE))
 def test_window_grid_matches_fits_after_evictions(seed):
     rng = random.Random(seed)
     st = NetworkState(1)

@@ -7,10 +7,13 @@ their bespoke admission loops).  The unified ``SchedulingPolicy`` path must
 reproduce each summary exactly — decisions, preemptions, completions,
 core-allocation histograms, all of it (wall-clock timing fields excluded).
 
-Regenerate (only when behaviour is *intentionally* changed)::
+Regenerate (only when behaviour is *intentionally* changed) through the
+helper, which prints a reviewable structured diff::
 
-    PYTHONPATH=src python -c "import tests.test_scenario_replay as t; t.regen()"
+    PYTHONPATH=src python tests/regen_golden.py            # regen + diff
+    PYTHONPATH=src python tests/regen_golden.py --check    # diff only
 """
+import importlib.util
 import json
 from dataclasses import replace
 from pathlib import Path
@@ -22,6 +25,15 @@ from repro.sim import SCENARIOS, ScenarioConfig, run_scenario
 from repro.sim.experiment import MIXED_SCENARIOS
 
 GOLDEN = Path(__file__).parent / "data" / "golden_scenarios.json"
+
+
+def _regen_helper():
+    """Load tests/regen_golden.py whether or not ``tests`` is a package."""
+    spec = importlib.util.spec_from_file_location(
+        "regen_golden", Path(__file__).parent / "regen_golden.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 #: Every golden-replayed scenario: the paper's Table-1 set (captured from
 #: the pre-refactor backends) plus the heterogeneous-workload set (captured
@@ -37,13 +49,9 @@ def _summary(metrics) -> dict:
 
 
 def regen() -> None:
-    data = json.loads(GOLDEN.read_text())
-    n = data["n_frames"]
-    data["summaries"] = {
-        name: _summary(run_scenario(replace(cfg, n_frames=n)))
-        for name, cfg in ALL_GOLDEN_SCENARIOS.items()
-    }
-    GOLDEN.write_text(json.dumps(data, indent=1, sort_keys=True))
+    """Kept for the historic entry point; delegates to the diff-printing
+    helper (tests/regen_golden.py)."""
+    _regen_helper().regen()
 
 
 @pytest.fixture(scope="module")

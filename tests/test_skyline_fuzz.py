@@ -11,8 +11,13 @@ bookkeeping fails loudly with the seed that reproduces it.
 
 No hypothesis dependency: plain seeded ``random`` sweeps, deterministic
 corpus (the container image does not ship hypothesis).
+
+Set ``REPRO_FUZZ_SEEDS=<k>`` to multiply every seed count by ``k`` (the
+CI deep-fuzz job runs with a large multiplier; tier-1 defaults are
+unchanged at ``k=1``).
 """
 import math
+import os
 import random
 
 import pytest
@@ -28,6 +33,9 @@ from repro.core.calendar_reference import (
     ReferenceDeviceCalendar,
     ReferenceLinkCalendar,
 )
+
+#: Seed-count multiplier (REPRO_FUZZ_SEEDS env var; default x1 = tier-1).
+FUZZ_SCALE = max(1, int(os.environ.get("REPRO_FUZZ_SEEDS", "1") or "1"))
 
 _INF = math.inf
 
@@ -105,7 +113,7 @@ class BruteStep:
                 i += 1
 
 
-@pytest.mark.parametrize("seed", range(30))
+@pytest.mark.parametrize("seed", range(30 * FUZZ_SCALE))
 def test_stepfn_fuzz_vs_brute(seed):
     rng = random.Random(1000 + seed)
     sf = _StepFn()
@@ -149,7 +157,7 @@ def test_stepfn_fuzz_vs_brute(seed):
         assert all(v[i] != v[i + 1] for i in range(len(v) - 1))
 
 
-@pytest.mark.parametrize("seed", range(25))
+@pytest.mark.parametrize("seed", range(25 * FUZZ_SCALE))
 def test_device_calendar_fuzz(seed):
     """Longer, meaner sequences than test_calendar_equivalence: tag
     re-reservation, truncation churn, interleaved gc, plus the queries the
@@ -212,7 +220,7 @@ def test_device_calendar_fuzz(seed):
         assert len(new) == len(ref)
 
 
-@pytest.mark.parametrize("seed", range(25))
+@pytest.mark.parametrize("seed", range(25 * FUZZ_SCALE))
 def test_link_calendar_fuzz(seed):
     """Link fuzz with reserve-then-cancel churn (exercises the mutation-log
     annihilation path) on top of the usual earliest-slot agreement."""
@@ -249,7 +257,7 @@ def test_link_calendar_fuzz(seed):
         assert len(new) == len(ref)
 
 
-@pytest.mark.parametrize("seed", range(15))
+@pytest.mark.parametrize("seed", range(15 * FUZZ_SCALE))
 def test_probe_plane_fuzz_vs_scalar(seed):
     """The vectorized probe plane must answer bit-identically to the
     per-device scalar queries under random mutation/gc interleavings."""
