@@ -1,0 +1,256 @@
+"""Soak benchmark: sustained streaming traffic with an RSS-flatness gate.
+
+Pushes an open-ended firehose (``sim/openended.py``) through the
+streaming engine (``serving/stream.py``) at steady state and verifies the
+process footprint stays flat — the admission queue is bounded, terminal
+requests are dropped as they settle, and all telemetry is fixed-size
+sketches, so RSS at request 10^6 must match RSS at request 10^5.
+
+Default configuration is the trajectory point committed as
+``BENCH_7.json``: **1M requests over a 1024-device network**.  ``--smoke``
+is the CI tier (50k requests, 64 devices) gated on RSS flatness and p99
+admission latency.
+
+The timing model is a serve-style profile (tens-of-ms tasks, multi-GB/s
+link), not the paper's RPi2B constants: the paper's 16.3 MB/s link with
+2 ms jitter padding caps the *whole network* at ~245 admissions/s, which
+would make a 10^6-request soak mostly idle virtual time.  The scheduling
+machinery exercised is identical.
+
+Usage:
+    PYTHONPATH=src python benchmarks/soak.py [--smoke] [--gate]
+        [--requests N] [--devices N] [--rate R] [--window W] [--queue N]
+        [--shed NAME] [--policy NAME] [--seed N] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import resource
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.network import NetworkConfig  # noqa: E402
+from repro.core.profiles import TaskProfile, WorkloadSpec  # noqa: E402
+from repro.core.task import reset_id_counters  # noqa: E402
+from repro.serving.stream import StreamingEngine  # noqa: E402
+from repro.sim.openended import FirehoseConfig, firehose  # noqa: E402
+
+_PAGE = resource.getpagesize()
+
+# RSS-flatness gate: after warmup, late-half mean RSS may exceed the
+# early-half mean by at most max(RSS_ABS_MB, RSS_REL * early).  The
+# absolute floor absorbs allocator noise (arena growth, event-heap
+# high-water) on small runs.
+RSS_ABS_MB = 32.0
+RSS_REL = 0.10
+# CI smoke gate on p99 per-request admission latency (wall-clock).  The
+# 64-device scheduler admits in ~50-100 us; 50 ms is ~3 orders of
+# headroom for noisy shared runners while still catching an O(n) or
+# leak-driven collapse.
+P99_ADMISSION_GATE_S = 0.050
+
+
+def rss_bytes() -> float:
+    """Current (not peak) resident set size via /proc/self/statm."""
+    with open("/proc/self/statm") as fh:
+        return float(fh.read().split()[1]) * _PAGE
+
+
+def soak_network() -> NetworkConfig:
+    """Serve-style timing model: sub-second tasks, a 5 GB/s shared link."""
+    prof = TaskProfile(
+        name="serve",
+        hp_exec=0.020, hp_pad=0.002,
+        lp_exec={2: 0.200, 4: 0.120},
+        lp_pad={2: 0.010, 4: 0.008},
+        input_bytes=21500, output_bytes=550,
+        hp_deadline_slack=0.50,
+        lp_deadline=5.0,
+    )
+    spec = WorkloadSpec(name="soak_serve", profiles={"serve": prof},
+                        default_type="serve")
+    return NetworkConfig(throughput_bps=5e9, jitter_pad_s=2e-5,
+                         workload=spec)
+
+
+def run_soak(
+    *,
+    requests: int,
+    devices: int,
+    rate: float,
+    window: float,
+    queue: int,
+    shed: str,
+    policy: str,
+    seed: int,
+    progress: bool = True,
+) -> dict:
+    reset_id_counters()
+    eng = StreamingEngine(
+        devices, net=soak_network(), policy=policy,
+        queue_capacity=queue, shed=shed, window=window)
+    cfg = FirehoseConfig(
+        name="soak", n_devices=devices, rate=rate,
+        lp_fraction=0.4, lp_set_sizes=(1, 2, 3, 4), seed=seed)
+
+    expected_windows = max(1, int(requests / (rate * window)))
+    stride = max(1, expected_windows // 256)
+    rss_series: list[float] = []
+    windows_seen = [0]
+
+    def on_window(e: StreamingEngine) -> None:
+        windows_seen[0] += 1
+        if windows_seen[0] % stride == 0:
+            rss_series.append(rss_bytes())
+            if progress and len(rss_series) % 32 == 0:
+                t = e.telemetry
+                print(f"#   offered={t.offered:>9d} shed={t.shed_total:>7d} "
+                      f"depth={e.queue.live:>5d} rss={rss_series[-1]/2**20:7.1f} MB",
+                      flush=True)
+
+    rss_series.append(rss_bytes())
+    t0 = time.perf_counter()
+    report = eng.run(firehose(cfg, limit=requests), on_window=on_window)
+    wall = time.perf_counter() - t0
+    rss_series.append(rss_bytes())
+
+    # flatness: drop the first quarter (warmup — calendars, heaps and
+    # sketches reach steady state), compare early-half vs late-half means
+    tail = rss_series[len(rss_series) // 4:]
+    half = max(1, len(tail) // 2)
+    early = sum(tail[:half]) / half
+    late = sum(tail[-half:]) / half
+    growth = late - early
+    allowed = max(RSS_ABS_MB * 2**20, RSS_REL * early)
+
+    m, tel = report["metrics"], report["telemetry"]
+    adm, e2e = tel["admission_latency_s"], tel["e2e_latency_s"]
+    slo = tel["slo"]
+    attain = (sum(r["attained"] for r in slo.values())
+              / max(1, sum(r["attained"] + r["missed"] for r in slo.values())))
+    return {
+        "config": f"{devices}dev_{requests}req_{shed}_{policy}",
+        "report": report,
+        "requests": requests,
+        "wall_s": wall,
+        "req_per_s_wall": requests / wall if wall > 0 else 0.0,
+        "virtual_s": eng.q.now,
+        "hp_completion_pct": m["hp_completion_pct"],
+        "lp_completion_pct": m["lp_completion_pct"],
+        "slo_attainment_pct": 100.0 * attain,
+        "shed_total": tel["shed_total"],
+        "shed_pct": 100.0 * tel["shed_total"] / max(1, tel["offered"]),
+        "degraded": tel["degraded"],
+        "windows": tel["windows"],
+        "admission_p50_us": adm["p50"] * 1e6,
+        "admission_p99_us": adm["p99"] * 1e6,
+        "admission_p999_us": adm["p999"] * 1e6,
+        "e2e_p50_s": e2e["p50"],
+        "e2e_p99_s": e2e["p99"],
+        "e2e_p999_s": e2e["p999"],
+        "queue_depth_max": tel["queue_depth"]["max"],
+        "unresolved": report["unresolved"],
+        "rss_early_mb": early / 2**20,
+        "rss_late_mb": late / 2**20,
+        "rss_growth_mb": growth / 2**20,
+        "rss_allowed_mb": allowed / 2**20,
+        "rss_flat": growth <= allowed,
+        "rss_samples": len(rss_series),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--requests", type=int, default=1_000_000)
+    ap.add_argument("--devices", type=int, default=1024)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="arrivals per virtual second "
+                         "(default: 4.8 * devices)")
+    ap.add_argument("--window", type=float, default=0.05)
+    ap.add_argument("--queue", type=int, default=8192)
+    ap.add_argument("--shed", default="reject_cheapest")
+    ap.add_argument("--policy", default="scheduler")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI tier: 50k requests over 64 devices")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit non-zero on RSS growth or p99 admission "
+                         "latency beyond the gates")
+    ap.add_argument("--json", metavar="PATH", default=None)
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.requests = min(args.requests, 50_000)
+        args.devices = min(args.devices, 64)
+    rate = args.rate if args.rate is not None else 4.8 * args.devices
+
+    print(f"# soak: {args.requests} requests, {args.devices} devices, "
+          f"rate={rate:g}/s, window={args.window}s, queue={args.queue}, "
+          f"shed={args.shed}, policy={args.policy}", flush=True)
+    res = run_soak(
+        requests=args.requests, devices=args.devices, rate=rate,
+        window=args.window, queue=args.queue, shed=args.shed,
+        policy=args.policy, seed=args.seed)
+
+    skip = {"report", "config"}
+    for k, v in res.items():
+        if k in skip:
+            continue
+        print(f"# {k:>22s} = {v:.3f}" if isinstance(v, float)
+              else f"# {k:>22s} = {v}")
+
+    if args.json:
+        rows = [{"bench": "soak", "config": res["config"],
+                 "metric": k, "value": round(v, 4) if isinstance(v, float)
+                 else v}
+                for k, v in res.items()
+                if k not in skip and isinstance(v, (int, float))]
+        doc = {
+            "meta": {
+                "benchmark": "soak",
+                "machine": platform.machine(),
+                "python": platform.python_version(),
+                "quick": bool(args.smoke),
+                "requests": args.requests,
+                "devices": args.devices,
+                "rate": rate,
+                "window_s": args.window,
+                "queue_capacity": args.queue,
+                "shed": args.shed,
+                "policy": args.policy,
+                "seed": args.seed,
+                "total_wall_s": round(res["wall_s"], 1),
+            },
+            "rows": rows,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {len(rows)} rows to {args.json}")
+
+    if args.gate:
+        failures = []
+        if not res["rss_flat"]:
+            failures.append(
+                f"RSS grew {res['rss_growth_mb']:.1f} MB "
+                f"(allowed {res['rss_allowed_mb']:.1f} MB)")
+        if res["admission_p99_us"] > P99_ADMISSION_GATE_S * 1e6:
+            failures.append(
+                f"p99 admission latency {res['admission_p99_us']:.0f} us "
+                f"> {P99_ADMISSION_GATE_S * 1e6:.0f} us")
+        if res["unresolved"]:
+            failures.append(f"{res['unresolved']} unresolved tasks")
+        if failures:
+            print("# GATE FAIL: " + "; ".join(failures))
+            sys.exit(1)
+        print("# GATE PASS: RSS flat, admission p99 within bound")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,8 +7,14 @@ from statistics import mean
 from typing import Any
 
 
-def _mean_ms(xs: list[float]) -> float:
-    return mean(xs) * 1e3 if xs else 0.0
+def _mean_ms(xs) -> float:
+    """Mean in milliseconds of a latency series — a plain list or any sink
+    exposing an exact ``mean()`` (telemetry.BoundedSeries on the streaming
+    path, whose iteration covers only its recent window)."""
+    if not xs:
+        return 0.0
+    m = xs.mean() if hasattr(xs, "mean") else mean(xs)
+    return m * 1e3
 
 
 @dataclass
@@ -37,6 +43,16 @@ class Metrics:
     lp_requests_total: int = 0
     lp_requests_completed: int = 0
     lp_request_fractions: list[float] = field(default_factory=list)
+
+    # Streaming path (serving/stream.py) — load shedding at the admission
+    # queue.  A shed request's tasks never reach the scheduler: they are
+    # their own terminal bucket, partitioning the generated set together
+    # with the completed/failed counters (tests/test_accounting_invariants).
+    # Always zero on the closed-workload paths, where the summary keys are
+    # omitted so legacy summaries (and the golden replays) stay byte-equal.
+    hp_shed: int = 0
+    lp_shed: int = 0
+    lp_degraded: int = 0
 
     # Fig 7, Table 3 — preemption
     preemptions: int = 0
@@ -120,6 +136,13 @@ class Metrics:
             "t_lp_alloc_ms": round(_mean_ms(self.t_lp_alloc), 3),
             "t_realloc_ms": round(_mean_ms(self.t_realloc), 3),
         }
+        if self.hp_shed or self.lp_shed or self.lp_degraded:
+            # Present only on the streaming path: closed-workload summaries
+            # keep their historic key set (golden replays compare exact
+            # dict equality).
+            out["hp_shed"] = self.hp_shed
+            out["lp_shed"] = self.lp_shed
+            out["lp_degraded"] = self.lp_degraded
         if self.task_type_counts:
             # Present only for heterogeneous workloads: single-model (paper)
             # summaries keep their historic key set, which the golden-replay

@@ -242,6 +242,12 @@ class DispatchClient:
     def on_admit_fail(self, task: Task) -> None:
         """A task was rejected at admission (or failed during one)."""
 
+    def on_late(self, task: Task) -> None:
+        """A task reached a terminal state past its deadline (late
+        completion or slot violation) — the failure-side counterpart of the
+        ``on_*_complete`` hooks, so open-ended runtimes can settle their
+        per-request bookkeeping without a final sweep."""
+
 
 class PolicyDispatcher:
     """Drives any registered policy over an event queue: admission calls,
@@ -414,6 +420,7 @@ class PolicyDispatcher:
             self.metrics.hp_failed_runtime += 1
         else:
             self.metrics.lp_failed_runtime += 1
+        self.client.on_late(task)
 
     def _start_exact(self, alloc: Allocation) -> None:
         task = alloc.task
@@ -454,15 +461,20 @@ class PolicyDispatcher:
         slot execution modes and execution-driving policies."""
         m = self.metrics
         task.state = TaskState.FAILED if late else TaskState.COMPLETED
+        via_preemption = task in self._via_preemption
+        # terminal: the membership test above is the set's last use, so an
+        # open-ended streaming run doesn't retain every preempting HP task
+        self._via_preemption.discard(task)
         prefix = "hp" if task.priority == Priority.HIGH else "lp"
         m.count_type(task.task_type,
                      f"{prefix}_{'failed_runtime' if late else 'completed'}")
         if task.priority == Priority.HIGH:
             if late:
                 m.hp_failed_runtime += 1
+                self.client.on_late(task)
             else:
                 m.hp_completed += 1
-                if task in self._via_preemption:
+                if via_preemption:
                     m.hp_completed_via_preemption += 1
                 self.client.on_hp_complete(task)
         elif not late:
@@ -472,6 +484,7 @@ class PolicyDispatcher:
             self.client.on_lp_complete(task)
         else:
             m.lp_failed_runtime += 1
+            self.client.on_late(task)
 
     def finalize(self) -> None:
         self.policy.finalize(self.q.now)

@@ -234,6 +234,7 @@ class PreemptionAwareScheduler:
             )
         self.victim_policy = victim_policy
         self._requests: dict[int, LowPriorityRequest] = {}
+        self._requests_prune_at = 256
         # link reservations per task, so preemption/reallocation can cancel
         # a task's still-pending xfer/update messages.
         self.links = LinkSlotRegistry()
@@ -525,6 +526,29 @@ class PreemptionAwareScheduler:
         rule from core/victims.py over this reservation's task."""
         return victim_sort_key(r.tag, self.victim_policy, self._set_health)
 
+    _TERMINAL = (TaskState.COMPLETED, TaskState.FAILED, TaskState.VIOLATED)
+
+    def _prune_requests(self) -> None:
+        """Drop set-health registry entries whose tasks are all terminal.
+
+        A request only matters to ``_set_health``/``_cand_health`` while one
+        of its tasks can still be a preemption candidate — i.e. holds a live
+        reservation (ALLOCATED/RUNNING).  Once every task is terminal
+        (COMPLETED/FAILED/VIOLATED) the entry can never be consulted again,
+        so dropping it is decision-identical.  Amortised O(1): runs only
+        when the registry doubled (the ``LinkSlotRegistry.prune`` pattern) —
+        without this, an open-ended streaming run retains every
+        LowPriorityRequest ever admitted."""
+        if len(self._requests) <= self._requests_prune_at:
+            return
+        terminal = self._TERMINAL
+        self._requests = {
+            rid: req
+            for rid, req in self._requests.items()
+            if any(t.state not in terminal for t in req.tasks)
+        }
+        self._requests_prune_at = max(256, 2 * len(self._requests))
+
     def _set_health(self, task: Task) -> float:
         """Fraction of the task's request set still on track to complete."""
         req = (self._requests.get(task.request_id)
@@ -567,6 +591,7 @@ class PreemptionAwareScheduler:
         t_wall = _time.perf_counter()
         self.state.gc(now)
         self.links.prune(now)
+        self._prune_requests()
         self._requests[request.request_id] = request     # set-health registry
         deadline = request.deadline
         unallocated = [t for t in request.tasks if t.state == TaskState.PENDING]
@@ -783,6 +808,7 @@ class PreemptionAwareScheduler:
         t_wall = _time.perf_counter()
         self.state.gc(now)
         self.links.prune(now)
+        self._prune_requests()
         results = [LPResult() for _ in requests]
         order = itertools.count()
         pending: list[tuple[float, int, int, Task]] = []
@@ -1031,6 +1057,10 @@ class PreemptionAwareScheduler:
         for ``cores - alloc.cores`` MORE cores is bit-identical to the
         release-then-probe formulation — without paying two calendar
         mutations per failed attempt."""
+        if alloc.task.degraded:
+            # load-shedding degrade mode (serving/stream.py): the task is
+            # pinned to its minimum core configuration under overload
+            return False
         prof = self.net.profile(alloc.task.task_type)
         options = [c for c in prof.core_options if c > alloc.cores]
         if not options:

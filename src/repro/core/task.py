@@ -54,6 +54,11 @@ class Task:
     task_type: Optional[str] = None
     task_id: int = field(default_factory=lambda: next(_task_ids))
     state: TaskState = TaskState.PENDING
+    # Load-shedding degrade mode (serving/stream.py): a degraded LP task is
+    # pinned to its profile's minimum core configuration — the scheduler's
+    # core-upgrade pass skips it, so it keeps the smallest possible resource
+    # footprint under overload.  Never set on the closed-workload paths.
+    degraded: bool = False
     # Filled in by the scheduler on allocation:
     device: Optional[int] = None
     cores: int = 0

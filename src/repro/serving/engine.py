@@ -44,6 +44,7 @@ from ..models.config import ModelConfig
 from ..sim.events import EventQueue
 from ..training.steps import make_prefill_step, make_serve_step
 from .cost_model import CostModel
+from .stream import validate_submission
 
 _rid = itertools.count()
 
@@ -198,6 +199,10 @@ class PreemptiveServingEngine:
     # Submission                                                          #
     # ------------------------------------------------------------------ #
     def submit(self, req: ServeRequest) -> None:
+        validate_submission(
+            priority=req.priority, deadline=req.deadline, now=self.q.now,
+            max_new_tokens=req.max_new_tokens, task_type=req.task_type,
+            spec=self.net.spec)
         req.arrival = self.q.now
         self.q.push(self.q.now, lambda: self._admit(req))
 
@@ -215,6 +220,10 @@ class PreemptiveServingEngine:
                 self.submit(r)
         if lp:
             for r in lp:
+                validate_submission(
+                    priority=r.priority, deadline=r.deadline, now=self.q.now,
+                    max_new_tokens=r.max_new_tokens, task_type=r.task_type,
+                    spec=self.net.spec)
                 r.arrival = self.q.now
             self.q.push(self.q.now, lambda: self._admit_lp_batch(lp))
 

@@ -3,6 +3,7 @@ from .traces import TraceConfig, generate_trace, generate_type_trace, \
     potential_counts
 from .experiment import MIXED_SCENARIOS, ScenarioConfig, run_scenario, \
     SCENARIOS
+from .openended import FirehoseConfig, firehose
 from .scenarios import (
     LargeNConfig,
     generate_arrivals,
@@ -22,6 +23,8 @@ __all__ = [
     "ScenarioConfig",
     "run_scenario",
     "SCENARIOS",
+    "FirehoseConfig",
+    "firehose",
     "LargeNConfig",
     "generate_arrivals",
     "run_large_n",

@@ -41,6 +41,7 @@ class EventQueue:
             if ev.cancelled:
                 continue
             if until is not None and ev.time > until:
+                heapq.heappush(self._heap, ev)   # keep it for the next run()
                 self.now = until
                 return
             self.now = ev.time

@@ -24,14 +24,20 @@ scenario family x every registered policy:
 Runs are deliberately small (reduced frame counts) but cover every trace
 family the golden matrix uses, both preemption settings, and the mixed
 heterogeneous workload.
+
+The streaming path (serving/stream.py) adds a fifth terminal bucket —
+**shed** — at the admission queue; the suite's partition extends to it for
+every registered shed policy.
 """
 from dataclasses import replace
 
 import pytest
 
 from repro.core.policy import registered_policies
-from repro.core.task import Priority, TaskState
+from repro.core.task import Priority, TaskState, reset_id_counters
+from repro.serving.stream import StreamingEngine, registered_shed_policies
 from repro.sim.experiment import Runtime, ScenarioConfig
+from repro.sim.openended import FirehoseConfig, firehose
 
 TERMINAL = (TaskState.COMPLETED, TaskState.FAILED, TaskState.VIOLATED)
 
@@ -104,3 +110,34 @@ def test_completed_census_matches_counters(base, policy):
     assert len(hp_tasks) == m.hp_generated
     assert len(lp_tasks) == m.lp_generated
     assert all(t.priority == Priority.HIGH for t in hp_tasks)
+
+
+# --------------------------------------------------------------------- #
+# Streaming path: the shed bucket joins the partition                   #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("shed", sorted(registered_shed_policies()))
+@pytest.mark.parametrize("policy", ["scheduler", "edf_only"])
+def test_streaming_partition_includes_shed_bucket(shed, policy):
+    reset_id_counters()
+    eng = StreamingEngine(4, policy=policy, queue_capacity=16, shed=shed,
+                          window=0.5)
+    # paper-profile tasks at a rate 4 devices cannot sustain: guarantees
+    # queue saturation, so every terminal bucket (including shed) is hit
+    cfg = FirehoseConfig(n_devices=4, rate=40.0, seed=13)
+    report = eng.run(firehose(cfg, limit=1000))
+    m = eng.metrics
+    assert m.hp_shed + m.lp_shed > 0, "overload run must shed"
+    assert m.hp_generated == (
+        m.hp_completed + m.hp_failed_alloc + m.hp_failed_runtime + m.hp_shed
+    ), "HP counters (with shed) do not partition the offered HP tasks"
+    assert m.lp_generated == (
+        m.lp_completed + m.lp_failed_alloc + m.lp_failed_runtime
+        + m.realloc_failure + m.lp_shed
+    ), "LP counters (with shed) do not partition the offered LP tasks"
+    assert report["unresolved"] == 0
+    assert report["in_flight"] == 0 and report["queued"] == 0
+    # shed totals agree across the two accounting layers: Metrics counts
+    # tasks, telemetry counts requests
+    tel = eng.telemetry
+    assert tel.shed_total == tel.shed_queue_full + tel.shed_expired
+    assert tel.offered == m.hp_generated + m.lp_requests_total

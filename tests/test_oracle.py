@@ -213,9 +213,19 @@ def test_cpsat_backend_is_feature_gated():
     if not have_ortools():
         with pytest.raises(OracleInstanceError, match="ortools"):
             inst.solve("cpsat")
-    else:                                    # pragma: no cover (not in CI)
+    else:                                    # exercised by CI's cpsat job
         assert abs(inst.solve("cpsat").objective
                    - inst.solve("brute").objective) < 1e-6
+
+
+@pytest.mark.skipif(not have_ortools(), reason="ortools not installed "
+                    "(CI's non-blocking cpsat-oracle job installs it)")
+@pytest.mark.parametrize("seed", range(4))
+def test_cpsat_matches_brute_force_when_available(seed):
+    inst, _ = _instance(_random_setup(seed + 10))
+    cp = inst.solve("cpsat")
+    brute = inst.solve("brute")
+    assert abs(cp.objective - brute.objective) < 1e-6
 
 
 def test_oracle_is_registered_slot_based_policy():

@@ -1,0 +1,328 @@
+"""Streaming serving engine: validation, backpressure, shedding, determinism.
+
+Covers the DESIGN.md §14 subsystem end to end at test scale: the submit
+boundary rejects malformed requests naming the field; a saturated
+admission queue sheds according to the configured policy; the degrade
+policy pins LP work to its minimum core configuration; identical seeds
+reproduce identical virtual-time outcomes; and the probe plane persists
+(dirty-mark refreshed, never rebuilt) across admission windows.
+"""
+import math
+
+import pytest
+
+from repro.core.calendar import NetworkState
+from repro.core.network import NetworkConfig
+from repro.core.scheduler import PreemptionAwareScheduler
+from repro.core.task import (
+    LowPriorityRequest,
+    Priority,
+    reset_id_counters,
+)
+from repro.serving.stream import (
+    AdmissionQueue,
+    Backpressure,
+    StreamArrival,
+    StreamingEngine,
+    StreamRequest,
+    create_shed_policy,
+    registered_shed_policies,
+    validate_submission,
+)
+from repro.sim.openended import FirehoseConfig, firehose
+
+
+# --------------------------------------------------------------------- #
+# Submit-boundary validation                                            #
+# --------------------------------------------------------------------- #
+def _valid(**over):
+    kw = dict(priority=Priority.HIGH, deadline=5.0, now=0.0,
+              n_tasks=1, max_new_tokens=32, task_type=None,
+              spec=NetworkConfig().spec)
+    kw.update(over)
+    return kw
+
+
+def test_valid_submission_passes():
+    validate_submission(**_valid())
+
+
+@pytest.mark.parametrize("field,value,match", [
+    ("deadline", float("nan"), "deadline is NaN"),
+    ("deadline", float("inf"), "deadline must be finite"),
+    ("deadline", -1.0, "in the past"),
+    ("deadline", "soon", "deadline must be a number"),
+    ("n_tasks", 0, "n_tasks"),
+    ("n_tasks", -2, "n_tasks"),
+    ("n_tasks", 1.5, "n_tasks"),
+    ("max_new_tokens", 0, "max_new_tokens"),
+    ("max_new_tokens", -5, "max_new_tokens"),
+    ("priority", "high", "priority"),
+    ("task_type", "no_such_model", "unknown task_type 'no_such_model'"),
+])
+def test_invalid_submission_names_the_field(field, value, match):
+    with pytest.raises(ValueError, match=match):
+        validate_submission(**_valid(**{field: value}))
+
+
+def test_past_deadline_is_relative_to_now():
+    validate_submission(**_valid(deadline=5.0, now=4.0))
+    with pytest.raises(ValueError, match="in the past"):
+        validate_submission(**_valid(deadline=5.0, now=5.0))
+
+
+def test_engine_offer_validates_at_the_boundary():
+    eng = StreamingEngine(2, queue_capacity=8)
+    with pytest.raises(ValueError, match="deadline is NaN"):
+        eng.offer(StreamRequest(priority=Priority.HIGH,
+                                deadline=float("nan")))
+    with pytest.raises(ValueError, match="unknown task_type"):
+        eng.offer(StreamRequest(priority=Priority.LOW, deadline=9.0,
+                                task_type="bogus"))
+    # nothing was accounted for the rejected offers
+    assert eng.telemetry.offered == 0
+    assert eng.metrics.hp_generated == 0 and eng.metrics.lp_generated == 0
+
+
+# --------------------------------------------------------------------- #
+# Queue, backpressure and shed policies                                 #
+# --------------------------------------------------------------------- #
+def _hp(deadline=100.0, rid=None):
+    return StreamRequest(priority=Priority.HIGH, deadline=deadline, rid=rid)
+
+
+def _lp(deadline=100.0, n_tasks=2, rid=None):
+    return StreamRequest(priority=Priority.LOW, deadline=deadline,
+                         n_tasks=n_tasks, rid=rid)
+
+
+def test_admission_queue_validates_configuration():
+    with pytest.raises(ValueError, match="capacity"):
+        AdmissionQueue(capacity=0)
+    with pytest.raises(ValueError, match="soft_watermark"):
+        AdmissionQueue(capacity=4, soft_watermark=1.5)
+
+
+def test_unknown_shed_policy_lists_options():
+    with pytest.raises(ValueError, match="reject_newest"):
+        create_shed_policy("nope")
+    assert set(registered_shed_policies()) >= {
+        "reject_newest", "reject_cheapest", "degrade"}
+
+
+def test_backpressure_progression_accepted_soft_shed():
+    eng = StreamingEngine(2, queue_capacity=4, soft_watermark=0.75,
+                          shed="reject_newest")
+    assert eng.offer(_hp()) is Backpressure.ACCEPTED
+    assert eng.offer(_hp()) is Backpressure.ACCEPTED
+    assert eng.offer(_hp()) is Backpressure.SOFT      # depth 3 >= 0.75*4
+    assert eng.offer(_hp()) is Backpressure.SOFT      # full at depth 4
+    shed_me = _hp()
+    assert eng.offer(shed_me) is Backpressure.SHED
+    assert shed_me.state == "shed"
+    assert shed_me.shed_reason == "queue_full"
+    assert eng.metrics.hp_shed == 1
+    assert eng.telemetry.shed_queue_full == 1
+    assert eng.queue.live == 4
+
+
+def test_reject_newest_sheds_the_incoming_request():
+    eng = StreamingEngine(2, queue_capacity=2, shed="reject_newest")
+    first, second, third = _hp(), _hp(), _hp()
+    eng.offer(first), eng.offer(second)
+    assert eng.offer(third) is Backpressure.SHED
+    assert third.state == "shed"
+    assert first.state == "queued" and second.state == "queued"
+
+
+def test_reject_cheapest_prefers_lp_then_cost_then_newest():
+    eng = StreamingEngine(2, queue_capacity=3, shed="reject_cheapest")
+    hp, lp_big, lp_small = _hp(), _lp(n_tasks=4), _lp(n_tasks=1)
+    eng.offer(hp), eng.offer(lp_big), eng.offer(lp_small)
+    incoming = _hp()
+    assert eng.offer(incoming) is Backpressure.SOFT   # queued: a victim shed
+    assert lp_small.state == "shed"                   # LP < HP, then min cost
+    assert hp.state == "queued" and lp_big.state == "queued"
+    assert incoming.state == "queued"
+    # among equals the newest is shed
+    eng2 = StreamingEngine(2, queue_capacity=2, shed="reject_cheapest")
+    a, b = _lp(n_tasks=2), _lp(n_tasks=2)
+    eng2.offer(a), eng2.offer(b)
+    c = _lp(n_tasks=2)
+    eng2.offer(c)
+    assert c.state == "shed"                          # newest of the equals
+    assert a.state == "queued" and b.state == "queued"
+
+
+def test_degrade_policy_downgrades_queued_lp_at_the_watermark():
+    eng = StreamingEngine(2, queue_capacity=4, soft_watermark=0.5,
+                          shed="degrade")
+    lp1, hp1 = _lp(), _hp()
+    eng.offer(lp1)
+    assert lp1.degraded is False
+    eng.offer(hp1)                                    # depth 2 hits watermark
+    assert lp1.degraded is True                       # queued LP downgraded
+    assert hp1.degraded is False                      # HP never degraded
+    assert eng.metrics.lp_degraded == 1
+    assert eng.telemetry.degraded == 1
+    # full queue: incoming LP is degraded, then cheapest-shed kicks in
+    eng.offer(_lp()), eng.offer(_lp())
+    incoming = _lp(n_tasks=1)
+    eng.offer(incoming)
+    assert incoming.degraded is True
+    assert incoming.state == "shed"                   # it was the cheapest
+
+
+def test_degraded_task_is_pinned_to_minimum_core_configuration():
+    # unit check of the scheduler hook the degrade policy leans on: the
+    # upgrade pass skips degraded tasks, so an empty network still
+    # allocates core_options[0]
+    for degraded, want in ((False, 4), (True, 2)):
+        reset_id_counters()
+        net = NetworkConfig()
+        sched = PreemptionAwareScheduler(NetworkState(2, capacity=4), net)
+        req = LowPriorityRequest(source_device=0, deadline=100.0,
+                                 frame_id=0, n_tasks=1)
+        for t in req.make_tasks():
+            t.degraded = degraded
+        res = sched.allocate_low_priority(req, 0.0)
+        assert [a.cores for a in res.allocations] == [want]
+
+
+def test_expired_requests_are_shed_at_the_window_not_admitted():
+    eng = StreamingEngine(2, queue_capacity=8, window=1.0)
+    doomed = _hp(deadline=0.5)        # dies before the first window flush
+    alive = _hp(deadline=100.0)
+    eng.offer(doomed, now=0.0)
+    eng.offer(alive, now=0.0)
+    eng.q.now = 1.0
+    eng.flush_window(1.0)
+    assert doomed.state == "shed" and doomed.shed_reason == "expired"
+    assert eng.telemetry.shed_expired == 1
+    assert alive.state == "admitted"
+    assert eng.metrics.hp_shed == 1
+
+
+def test_window_budget_defers_excess_work():
+    eng = StreamingEngine(2, queue_capacity=16, window_budget=2)
+    for _ in range(5):
+        eng.offer(_hp())
+    admitted = eng.flush_window(0.5)
+    assert admitted == 2
+    assert eng.queue.live == 3        # the rest waits for the next window
+
+
+# --------------------------------------------------------------------- #
+# End-to-end: overload runs, accounting, determinism, plane reuse       #
+# --------------------------------------------------------------------- #
+def _overload_run(shed: str, seed: int = 9, limit: int = 1200):
+    """Paper-profile tasks at a rate 4 devices cannot sustain: guarantees
+    queue-full shedding, preemption and deadline misses."""
+    reset_id_counters()
+    eng = StreamingEngine(4, queue_capacity=16, shed=shed, window=0.5,
+                          keep_done=limit)
+    cfg = FirehoseConfig(n_devices=4, rate=40.0, seed=seed)
+    report = eng.run(firehose(cfg, limit=limit))
+    return eng, report
+
+
+@pytest.mark.parametrize("shed", sorted(registered_shed_policies()))
+def test_overload_sheds_and_still_partitions_exactly(shed):
+    eng, report = _overload_run(shed)
+    m = eng.metrics
+    assert m.hp_shed + m.lp_shed > 0, "overload run must shed"
+    assert m.hp_generated == (m.hp_completed + m.hp_failed_alloc
+                              + m.hp_failed_runtime + m.hp_shed)
+    assert m.lp_generated == (m.lp_completed + m.lp_failed_alloc
+                              + m.lp_failed_runtime + m.realloc_failure
+                              + m.lp_shed)
+    assert report["unresolved"] == 0
+    assert report["in_flight"] == 0 and report["queued"] == 0
+    s = report["metrics"]
+    assert s["hp_shed"] == m.hp_shed and s["lp_shed"] == m.lp_shed
+    # every offered request reached exactly one terminal request state
+    states = {"done", "failed", "shed"}
+    assert all(r.state in states for r in eng.done)
+    assert len(eng.done) == eng.telemetry.offered
+
+
+def test_degrade_run_degrades_under_pressure():
+    eng, _ = _overload_run("degrade")
+    assert eng.metrics.lp_degraded > 0
+    assert eng.telemetry.degraded == eng.metrics.lp_degraded
+
+
+_WALL_KEYS = {"t_hp_initial_ms", "t_hp_preempt_ms", "t_lp_alloc_ms",
+              "t_realloc_ms"}
+
+
+def _virtual_view(report):
+    """The report minus wall-clock quantities (which legitimately vary)."""
+    return {
+        "metrics": {k: v for k, v in report["metrics"].items()
+                    if k not in _WALL_KEYS},
+        "telemetry": {k: v for k, v in report["telemetry"].items()
+                      if k != "admission_latency_s"},
+        "unresolved": report["unresolved"],
+    }
+
+
+def test_open_ended_trace_is_seed_deterministic():
+    _, r1 = _overload_run("degrade", seed=21)
+    _, r2 = _overload_run("degrade", seed=21)
+    _, r3 = _overload_run("degrade", seed=22)
+    assert _virtual_view(r1) == _virtual_view(r2)
+    assert _virtual_view(r1) != _virtual_view(r3)
+
+
+def test_probe_plane_persists_across_windows():
+    reset_id_counters()
+    eng = StreamingEngine(4, queue_capacity=64, window=0.5)
+    plane = eng.policy.state.probe_plane()
+    windows = []
+    eng.run(firehose(FirehoseConfig(n_devices=4, rate=20.0, seed=1),
+                     limit=300),
+            on_window=lambda e: windows.append(
+                e.policy.state.probe_plane() is plane))
+    assert len(windows) > 5
+    assert all(windows), "probe plane was rebuilt instead of refreshed"
+
+
+def test_e2e_latency_includes_queueing_delay():
+    eng, report = _overload_run("reject_newest")
+    e2e = report["telemetry"]["e2e_latency_s"]
+    if e2e["count"]:
+        assert e2e["p50"] > 0.0
+        assert math.isfinite(e2e["max"])
+
+
+def test_underload_run_completes_everything():
+    reset_id_counters()
+    eng = StreamingEngine(8, queue_capacity=256, window=0.5)
+    cfg = FirehoseConfig(n_devices=8, rate=2.0, lp_fraction=0.3, seed=5)
+    report = eng.run(firehose(cfg, limit=120))
+    t = report["telemetry"]
+    assert t["shed_total"] == 0
+    m = eng.metrics
+    assert m.hp_generated == m.hp_completed + m.hp_failed_alloc \
+        + m.hp_failed_runtime
+    assert "hp_shed" not in report["metrics"], \
+        "shed keys must stay absent when nothing was shed"
+
+
+def test_request_from_arrival_derives_profile_deadlines():
+    eng = StreamingEngine(2)
+    prof = eng.net.profile(None)
+    hp = eng.request_from_arrival(
+        StreamArrival(t=3.0, device=1, priority=Priority.HIGH))
+    assert hp.deadline == pytest.approx(prof.hp_deadline(3.0))
+    lp = eng.request_from_arrival(
+        StreamArrival(t=3.0, device=1, priority=Priority.LOW, n_tasks=3,
+                      rel_deadline=7.0))
+    assert lp.deadline == pytest.approx(10.0)
+    assert lp.n_tasks == 3
+    lp2 = eng.request_from_arrival(
+        StreamArrival(t=0.0, device=0, priority=Priority.LOW))
+    assert lp2.deadline == pytest.approx(
+        prof.lp_deadline if prof.lp_deadline is not None
+        else eng.default_lp_deadline)

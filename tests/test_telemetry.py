@@ -1,0 +1,182 @@
+"""Telemetry substrate: sketch accuracy, flat memory, list-compatibility.
+
+The streaming engine's telemetry (core/telemetry.py) must answer p50/p99/
+p999 queries within the documented error bound while holding a fixed
+allocation regardless of how many samples were recorded — these tests pin
+both properties, plus the ``BoundedSeries`` shim the streaming path swaps
+into ``Metrics``' latency lists.
+"""
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import Metrics
+from repro.core.telemetry import (
+    BoundedSeries,
+    LogHistogram,
+    RingSampler,
+    SloTracker,
+    StreamTelemetry,
+)
+
+
+# --------------------------------------------------------------------- #
+# LogHistogram                                                          #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("dist", ["lognormal", "uniform", "bimodal"])
+def test_quantiles_within_documented_relative_error(dist):
+    rng = random.Random(42)
+    if dist == "lognormal":
+        xs = [math.exp(rng.gauss(-4.0, 1.5)) for _ in range(20_000)]
+    elif dist == "uniform":
+        xs = [rng.uniform(1e-4, 10.0) for _ in range(20_000)]
+    else:
+        xs = [rng.uniform(1e-4, 1e-3) if rng.random() < 0.7
+              else rng.uniform(1.0, 2.0) for _ in range(20_000)]
+    h = LogHistogram(lo=1e-7, hi=1e5, growth=1.02)
+    h.record_many(xs)
+    # documented bound: relative error <= sqrt(growth) - 1 (~1%); allow a
+    # hair extra for the rank-interpolation difference vs np.percentile
+    bound = math.sqrt(h.growth) - 1.0 + 0.01
+    for q in (0.50, 0.90, 0.99, 0.999):
+        true = float(np.percentile(xs, q * 100.0))
+        est = h.quantile(q)
+        assert abs(est - true) <= bound * true + 1e-12, (
+            f"{dist} q={q}: est={est:g} true={true:g}")
+
+
+def test_exact_aggregates_and_extremes():
+    h = LogHistogram()
+    xs = [0.5, 0.001, 3.0, 0.02]
+    for x in xs:
+        h.record(x)
+    assert h.count == 4
+    assert h.mean == pytest.approx(sum(xs) / 4)
+    assert h.vmin == min(xs) and h.vmax == max(xs)
+    assert h.quantile(0.0) >= min(xs) * 0.99
+    assert h.quantile(1.0) == max(xs)
+
+
+def test_record_many_equals_record_loop():
+    xs = [math.exp(random.Random(1).gauss(0, 2)) for _ in range(500)]
+    a, b = LogHistogram(), LogHistogram()
+    for x in xs:
+        a.record(x)
+    b.record_many(xs)
+    assert a.count == b.count
+    assert a.total == pytest.approx(b.total)
+    assert np.array_equal(a._counts, b._counts)
+
+
+def test_under_and_overflow_pin_instead_of_dropping():
+    h = LogHistogram(lo=1e-3, hi=1e3)
+    h.record(1e-9)       # underflow
+    h.record(1e9)        # overflow
+    assert h.count == 2
+    assert h.quantile(0.0) <= h.lo
+    assert h.quantile(1.0) == 1e9     # overflow reports the exact max
+
+
+def test_merge_matches_single_sketch():
+    xs = [random.Random(7).uniform(0.001, 5.0) for _ in range(1000)]
+    whole, a, b = LogHistogram(), LogHistogram(), LogHistogram()
+    whole.record_many(xs)
+    a.record_many(xs[:400])
+    b.record_many(xs[400:])
+    a.merge(b)
+    assert a.count == whole.count
+    assert a.quantile(0.99) == pytest.approx(whole.quantile(0.99))
+    with pytest.raises(ValueError, match="geometry"):
+        a.merge(LogHistogram(lo=1e-5))
+
+
+def test_nbytes_is_flat_under_load():
+    h = LogHistogram()
+    before = h.nbytes
+    h.record_many(np.random.default_rng(0).lognormal(0, 2, 50_000))
+    assert h.nbytes == before
+
+
+def test_empty_sketch_snapshot_is_zeroed():
+    s = LogHistogram().snapshot()
+    assert s == {"count": 0, "mean": 0.0, "p50": 0.0, "p99": 0.0,
+                 "p999": 0.0, "max": 0.0}
+
+
+# --------------------------------------------------------------------- #
+# RingSampler / SloTracker                                              #
+# --------------------------------------------------------------------- #
+def test_ring_sampler_keeps_most_recent_in_order():
+    r = RingSampler(capacity=4)
+    for i in range(10):
+        r.sample(float(i), float(i * 10))
+    assert len(r) == 4
+    assert r.total_samples == 10
+    assert list(r.values()) == [60.0, 70.0, 80.0, 90.0]
+    assert list(r.times()) == [6.0, 7.0, 8.0, 9.0]
+    snap = r.snapshot()
+    assert snap["last"] == 90.0 and snap["max"] == 90.0
+    assert snap["count"] == 10
+
+
+def test_slo_tracker_per_type_attainment():
+    s = SloTracker()
+    for _ in range(3):
+        s.record("chat", True)
+    s.record("chat", False)
+    s.record(None, True)          # None folds into "default"
+    assert s.attainment("chat") == pytest.approx(0.75)
+    snap = s.snapshot()
+    assert snap["chat"]["attainment_pct"] == 75.0
+    assert snap["default"]["attained"] == 1
+    assert s.attainment("never_seen") == 0.0
+
+
+# --------------------------------------------------------------------- #
+# BoundedSeries as a Metrics latency sink                               #
+# --------------------------------------------------------------------- #
+def test_bounded_series_is_list_compatible():
+    b = BoundedSeries(window=8)
+    assert not b and len(b) == 0
+    b.extend(0.001 * (i + 1) for i in range(100))
+    assert b and len(b) == 100
+    assert list(b) == [0.001 * (i + 1) for i in range(92, 100)]
+    assert b.mean() == pytest.approx(sum(0.001 * (i + 1)
+                                         for i in range(100)) / 100)
+
+
+def test_metrics_summary_accepts_bounded_series():
+    m = Metrics(scenario="stream")
+    for f in ("t_hp_initial", "t_hp_preempt", "t_lp_alloc",
+              "t_realloc", "t_evict"):
+        setattr(m, f, BoundedSeries())
+    for _ in range(5000):
+        m.t_hp_initial.append(0.002)
+    s = m.summary()
+    assert s["t_hp_initial_ms"] == pytest.approx(2.0, rel=1e-6)
+    assert s["t_lp_alloc_ms"] == 0.0
+
+
+def test_shed_keys_only_appear_on_streaming_path():
+    m = Metrics(scenario="x")
+    assert "hp_shed" not in m.summary()    # legacy summaries: byte-stable
+    m.lp_shed = 3
+    s = m.summary()
+    assert s["lp_shed"] == 3 and s["hp_shed"] == 0 and s["lp_degraded"] == 0
+
+
+def test_stream_telemetry_snapshot_shape():
+    t = StreamTelemetry(depth_samples=16)
+    t.admission.record(1e-4)
+    t.e2e.record(0.5)
+    t.queue_depth.sample(1.0, 12.0)
+    t.slo.record(None, True)
+    t.shed_queue_full += 2
+    t.shed_expired += 1
+    snap = t.snapshot()
+    assert snap["shed_total"] == 3
+    assert snap["admission_latency_s"]["count"] == 1
+    assert snap["slo"]["default"]["attained"] == 1
+    assert snap["queue_depth"]["last"] == 12.0
