@@ -1,0 +1,21 @@
+"""Shipped rule families (DESIGN.md §15 is the catalog).
+
+Each module contributes one family; ``repro.analysis.engine.default_rules``
+assembles the stable shipped order.
+"""
+from .determinism import SetIterRule, UnseededRngRule, WallClockRule
+from .kernel_rules import JaxImportRule, PallasIndexRule
+from .mirror_sync import DirtyNotifyRule, MirrorWriteRule
+from .terminal_state import SETTLE_HELPERS, TerminalStateRule
+
+__all__ = [
+    "MirrorWriteRule",
+    "DirtyNotifyRule",
+    "TerminalStateRule",
+    "SETTLE_HELPERS",
+    "WallClockRule",
+    "UnseededRngRule",
+    "SetIterRule",
+    "PallasIndexRule",
+    "JaxImportRule",
+]

@@ -711,7 +711,7 @@ class DeviceCalendar:
         return [t for t, _ in itertools.groupby(a[lo:hi].tolist())]
 
     # -- updates ---------------------------------------------------------- #
-    def _t2s_insert(self, t2: float) -> None:
+    def _t2s_insert(self, t2: float) -> None:  # replint: disable=dirty-notify (caller notifies)
         # manual splice: np.insert/np.delete carry ~10x Python overhead
         a = self._t2s
         i = int(a.searchsorted(t2))
@@ -721,7 +721,7 @@ class DeviceCalendar:
         b[i + 1 :] = a[i:]
         self._t2s = b
 
-    def _t2s_remove(self, t2: float) -> None:
+    def _t2s_remove(self, t2: float) -> None:  # replint: disable=dirty-notify (caller notifies)
         a = self._t2s
         i = int(a.searchsorted(t2))
         if i < a.shape[0] and a[i] == t2:
@@ -746,7 +746,7 @@ class DeviceCalendar:
         self._touch()
         return r
 
-    def _remove_interval(self, r: Reservation) -> None:
+    def _remove_interval(self, r: Reservation) -> None:  # replint: disable=dirty-notify (caller notifies)
         if self._lp is not None:
             self._lp.discard(r.tag)
         self._sky.add(r.t1, r.t2, -r.amount)
@@ -883,7 +883,7 @@ class _ProbePlane:
             return
         devices = self._state.devices
         need_w = need_t = 0
-        for idx in dirty:
+        for idx in dirty:  # replint: disable=determinism-set-iter (max-reduction over rows; order-independent)
             dev = devices[idx]
             sf = dev._sky
             sf._flush()
@@ -1179,7 +1179,7 @@ class NetworkState:
         while heap and heap[0][0] <= now:
             _, idx = heapq.heappop(heap)
             seen.add(idx)
-        for idx in seen:
+        for idx in sorted(seen):       # pinned order: heap re-pushes below
             d = devices[idx]
             d.gc(now)
             # Re-register the device's next expiry: keeps it tracked even

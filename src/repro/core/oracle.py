@@ -326,7 +326,7 @@ class OracleInstance:
                 raise OracleInstanceError(
                     f"transfer subset-sums exceed {self.max_sums}")
         release0 = min(j.release for j in jobs)
-        for d in xfer_sums:
+        for d in xfer_sums:  # replint: disable=determinism-set-iter (set-to-set accumulation into `base`; grid is sorted() at the end)
             if d > FEAS:
                 base.add(round(self._link_clear_point(release0, d), _ROUND))
 
@@ -341,7 +341,7 @@ class OracleInstance:
         limit = self._max_start - self.now
         for opts in deltas:
             new = set()
-            for s in sums:
+            for s in sums:  # replint: disable=determinism-set-iter (set-to-set accumulation; order-free union)
                 for d in opts:
                     v = round(s + d, _ROUND)
                     if v <= limit:
@@ -352,12 +352,12 @@ class OracleInstance:
                     f"slot-duration subset-sums exceed {self.max_sums}")
 
         pts: set[float] = set()
-        for b in base:
+        for b in base:  # replint: disable=determinism-set-iter (set-to-set accumulation into `pts`; grid is sorted() at the end)
             if b > self._max_start:
                 if b <= self.horizon:
                     pts.add(b)        # capacity breakpoint past last start
                 continue
-            for s in sums:
+            for s in sums:  # replint: disable=determinism-set-iter (set-to-set accumulation; order-free union)
                 v = round(b + s, _ROUND)
                 if v <= self._max_start:
                     pts.add(v)

@@ -878,7 +878,11 @@ class PreemptionAwareScheduler:
                     results[ridx].allocations.append(alloc)
                     progressed.add(ridx)
                     push_tp(alloc.t_end)
-                for ridx in progressed:
+                # Sorted: upgrades shrink reservations, so cross-request
+                # upgrade order can change what later upgrades see — pin
+                # it to ascending request index instead of set order
+                # (which only coincides with it for small ints).
+                for ridx in sorted(progressed):
                     for t_end in self._upgrade_pass(results[ridx].allocations,
                                                     hints):
                         # the upgrade moved this completion point earlier;

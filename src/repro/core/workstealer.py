@@ -347,7 +347,9 @@ class WorkstealingPolicy(SchedulingPolicy):
         # Victims still awaiting a re-steal: their reallocation never
         # happened.  Mark them terminal here (they also sit in a queue
         # below, which must NOT count them again into lp_failed_alloc).
-        for task in self._preempt_pending:
+        # Sorted by task id: set order over Tasks is an implementation
+        # detail (task_id value hashing); settle in submission order.
+        for task in sorted(self._preempt_pending, key=lambda t: t.task_id):
             task.state = TaskState.FAILED
             m.realloc_failure += 1
         self._preempt_pending.clear()

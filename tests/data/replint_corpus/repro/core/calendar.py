@@ -1,0 +1,30 @@
+"""Corpus: dirty-notify polarities.  This relpath IS the owning module,
+so mirror-sync skips it and dirty-notify applies."""
+
+
+class GoodCalendar:
+    def _touch(self):
+        pass
+
+    def reserve(self, t):                  # good: mutates AND notifies
+        self._sky.add(t)
+        self._touch()
+
+    def release(self, t):                  # BAD: mutates _t2s, never notifies
+        self._t2s.remove(t)
+
+    def splice(self, t):                   # BAD: calls a splicer, never notifies
+        self._t2s_insert(t)
+
+    def _t2s_insert(self, t):  # replint: disable=dirty-notify (caller notifies)
+        self._sky.add(t)
+
+    def query(self, t):                    # good: read-only
+        return t in self._sky
+
+
+class NotWired:
+    """No ``_touch`` — not dirty-mark-wired, so the rule stays silent."""
+
+    def mutate(self, t):
+        self._sky.add(t)

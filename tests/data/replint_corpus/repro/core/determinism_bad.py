@@ -1,0 +1,27 @@
+"""Corpus: determinism violations — clocks, RNG, set iteration."""
+import random
+import time
+from time import perf_counter as pc
+
+import numpy as np
+
+
+class Plane:
+    def __init__(self):
+        self._pending: set[int] = set()
+
+    def refresh(self, state):
+        stamp = time.time()                         # BAD: wall clock
+        tick = pc()                                 # BAD: wall clock via alias
+        rng = np.random.default_rng()               # BAD: unseeded generator
+        noise = np.random.normal()                  # BAD: global-state draw
+        random.shuffle([])                          # BAD: global-state draw
+        r = random.Random()                         # BAD: unseeded instance
+        for idx in self._pending:                   # BAD: set iter (self attr)
+            pass
+        pending = {1, 2, 3}
+        for p in pending:                           # BAD: set iter (local)
+            pass
+        d = state._pending
+        rows = [i for i in d]                       # BAD: set iter (alias)
+        return stamp, tick, rng, noise, r, rows

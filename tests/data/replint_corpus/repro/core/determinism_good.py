@@ -1,0 +1,21 @@
+"""Corpus: determinism-safe counterparts for every bad shape."""
+import random
+
+import numpy as np
+
+
+class Plane:
+    def __init__(self, seed):
+        self._pending: set[int] = set()
+        self._rng = np.random.default_rng(seed)     # good: seeded
+        self._py = random.Random(seed)              # good: seeded
+
+    def refresh(self, groups):
+        for idx in sorted(self._pending):           # good: pinned order
+            pass
+        seen = {i + 1 for i in self._pending}       # good: SetComp is exempt
+        batch = set()
+        for batch in groups:                        # rebinds batch (non-set)
+            for item in batch:                      # good: target was rebound
+                pass
+        return seen

@@ -1,0 +1,9 @@
+"""Corpus: mirror-sync violations — raw buffer writes outside the owner."""
+
+
+def clobber(dev, state, arr):
+    dev._sky = arr                         # BAD: direct write
+    dev._t2s.remove(0.5)                   # BAD: mutator through _t2s
+    state._dirty.clear()                   # BAD: mutator through _dirty
+    del dev._lp                            # BAD: delete
+    dev._sky._steps[0] += 1.0              # BAD: augassign through _sky

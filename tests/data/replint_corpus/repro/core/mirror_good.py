@@ -1,0 +1,9 @@
+"""Corpus: mirror-safe usage — the calendar mutation API plus reads."""
+
+
+def wellbehaved(dev, now):
+    r = dev.reserve(now, now + 1.0, 0.5)   # good: the mutation API
+    dev.release(r)
+    dev.truncate(r, now)
+    dev.gc(now)                            # good: mutator name, clean receiver
+    return dev._sky                        # good: reads are unrestricted

@@ -1,0 +1,11 @@
+"""Corpus: settle helpers from the audited registry are exempt; anything
+else in the same file is not."""
+from repro.core.task import TaskState
+
+
+class PolicyDispatcher:
+    def submit_hp(self, task):             # good: registry settle helper
+        task.state = TaskState.FAILED
+
+    def rogue(self, task):                 # BAD: not in the registry
+        task.state = TaskState.VIOLATED

@@ -1,0 +1,9 @@
+"""Corpus: terminal-state assignments outside the settle registry."""
+from repro.core.task import TaskState
+
+
+def leak(task, late):
+    task.state = TaskState.FAILED                       # BAD
+    task.state = (TaskState.VIOLATED if late
+                  else TaskState.COMPLETED)             # BAD: conditional RHS
+    task.state = TaskState.RUNNING                      # good: non-terminal

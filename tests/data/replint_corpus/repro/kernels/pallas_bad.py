@@ -1,0 +1,7 @@
+"""Corpus: bare-int pallas index — the exact PR 3 bug shape."""
+from jax.experimental import pallas as pl
+
+
+def kernel(q_ref, o_ref):
+    row = pl.load(q_ref, (0, pl.ds(0, 4)))          # BAD: bare 0
+    pl.store(o_ref, (pl.ds(0, 4), -1), row)         # BAD: bare -1

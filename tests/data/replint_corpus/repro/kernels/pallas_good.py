@@ -1,0 +1,8 @@
+"""Corpus: pallas indices written the supported way."""
+from jax.experimental import pallas as pl
+
+
+def kernel(q_ref, o_ref, s, bk):
+    row = pl.load(q_ref, (pl.ds(0, 1), pl.ds(0, 4)))        # good
+    pl.store(o_ref, (pl.ds(s * bk, bk), slice(None)), row)  # good: arithmetic
+    return pl.load(q_ref, (s + 1, pl.ds(0, 4)))             # good: not a literal

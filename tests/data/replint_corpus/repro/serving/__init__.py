@@ -1,0 +1,10 @@
+"""Corpus: deferred + type-only jax imports are allowed on the boundary."""
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:
+    import jax                             # good: type-only
+
+
+def run(x):
+    import jax                             # good: deferred into the function
+    return jax, x

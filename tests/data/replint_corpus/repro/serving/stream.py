@@ -1,0 +1,8 @@
+"""Corpus: the streaming path must import without jax."""
+import jax                                 # BAD: module-level
+from jax.experimental import pallas        # BAD: module-level from-import
+
+try:
+    import jax.numpy as jnp                # BAD: try does not defer
+except ImportError:
+    jnp = None

@@ -1,0 +1,12 @@
+"""Corpus: pragma scoping — suppression is per-line, not per-file."""
+import time
+
+
+def stamped():
+    t0 = time.time()  # replint: disable=determinism-wallclock (corpus: attested telemetry)
+    t1 = time.time()                       # BAD: pragma above does not reach here
+    return t0, t1
+
+
+def all_off():
+    return time.time()  # replint: disable=all

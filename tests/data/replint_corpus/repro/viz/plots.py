@@ -1,0 +1,6 @@
+"""Corpus: outside the jax-free boundary a module-level jax import is fine."""
+import jax
+
+
+def show(x):
+    return jax, x

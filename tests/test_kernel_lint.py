@@ -4,15 +4,21 @@ indices.
 This JAX version's interpret-mode discharge rule for ``pl.load`` rejects a
 bare Python int inside the index tuple (``'int' object has no attribute
 'shape'``) — the bug that broke all 18 flash-attention sweeps until the
-index was rewritten as ``pl.ds(0, 1)`` + squeeze.  The grep below fails any
-kernel that reintroduces the pattern, so the class cannot regress silently.
+index was rewritten as ``pl.ds(0, 1)`` + squeeze.  The check is the
+``pallas-index`` AST rule from ``repro.analysis`` (which replaced this
+file's original regex/paren-walker), run here per kernel file so the class
+cannot regress silently and the offender is named in the test id.
 """
-import re
+import textwrap
 from pathlib import Path
 
 import pytest
 
-KERNELS_DIR = Path(__file__).parent.parent / "src" / "repro" / "kernels"
+from repro.analysis import PallasIndexRule, run_analysis
+
+SRC = Path(__file__).parent.parent / "src"
+KERNELS_DIR = SRC / "repro" / "kernels"
+
 
 def _kernel_sources() -> list[Path]:
     return sorted(KERNELS_DIR.rglob("*.py"))
@@ -25,81 +31,31 @@ def test_kernel_sources_exist():
 @pytest.mark.parametrize("path", _kernel_sources(),
                          ids=lambda p: str(p.relative_to(KERNELS_DIR)))
 def test_no_bare_int_pl_load_indices(path):
-    src = path.read_text()
-    # Normalise whitespace so a call split across lines is still one match
-    # target, then scan every pl.load/pl.store call's index tuple.
-    flat = re.sub(r"\s+", " ", src)
-    for m in re.finditer(r"pl\.(?:load|store|swap)\(", flat):
-        # Walk the balanced parens of this call.
-        depth, i = 0, m.end() - 1
-        start = i
-        while i < len(flat):
-            if flat[i] == "(":
-                depth += 1
-            elif flat[i] == ")":
-                depth -= 1
-                if depth == 0:
-                    break
-            i += 1
-        call = flat[start:i + 1]
-        # Index tuple = the second top-level argument; none of its TOP-LEVEL
-        # elements may be a bare int literal (ints inside pl.ds(0, 1) or
-        # arithmetic like s * bk are fine — only a naked integer element
-        # trips the interpret-mode discharge rule).
-        bare = [e for e in _tuple_elements(_index_tuple(call))
-                if re.fullmatch(r"-?\d+", e.strip())]
-        assert not bare, (
-            f"{path}: bare Python int {bare} inside a pl.load/pl.store index "
-            f"tuple (use pl.ds(i, 1) + squeeze instead): {call!r}"
-        )
+    report = run_analysis(SRC, rules=[PallasIndexRule()], files=[path])
+    assert not report.findings, "\n".join(
+        f"{f.path}:{f.line}: {f.message}" for f, _ in report.findings
+    )
 
 
-def _index_tuple(call: str) -> str:
-    """Extract the second top-level argument (the index tuple) of a
-    ``pl.load(ref, (...))``-shaped call; '' when there is none."""
-    depth = 0
-    args_start = call.index("(") + 1
-    second = ""
-    arg_idx = 0
-    i = args_start
-    begin = i
-    while i < len(call):
-        c = call[i]
-        if c == "(":
-            depth += 1
-        elif c == ")":
-            if depth == 0:
-                if arg_idx == 1:
-                    second = call[begin:i]
-                break
-            depth -= 1
-        elif c == "," and depth == 0:
-            if arg_idx == 1:
-                second = call[begin:i]
-                break
-            arg_idx += 1
-            begin = i + 1
-        i += 1
-    return second
+def test_rule_catches_known_bad_pattern(tmp_path):
+    """The exact shape of the PR 3 bug — plus the swap variant and a
+    multi-line call the old regex needed whitespace-flattening for —
+    must still be caught after the AST migration."""
+    bad = tmp_path / "repro" / "kernels" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text(textwrap.dedent("""\
+        from jax.experimental import pallas as pl
 
-
-def _tuple_elements(tup: str) -> list[str]:
-    """Split a ``(a, b, c)``-shaped source fragment into its top-level
-    elements; a non-tuple fragment is returned as a single element."""
-    tup = tup.strip()
-    if not (tup.startswith("(") and tup.endswith(")")):
-        return [tup] if tup else []
-    inner = tup[1:-1]
-    out, depth, begin = [], 0, 0
-    for i, c in enumerate(inner):
-        if c in "([{":
-            depth += 1
-        elif c in ")]}":
-            depth -= 1
-        elif c == "," and depth == 0:
-            out.append(inner[begin:i])
-            begin = i + 1
-    tail = inner[begin:]
-    if tail.strip():
-        out.append(tail)
-    return out
+        def kernel(q_ref, o_ref):
+            row = pl.load(q_ref, (0, pl.ds(0, 4)))
+            pl.store(
+                o_ref,
+                (pl.ds(0, 4),
+                 0),
+                row,
+            )
+            pl.swap(o_ref, (-1, pl.ds(0, 4)), row)
+    """))
+    report = run_analysis(tmp_path, rules=[PallasIndexRule()])
+    lines = sorted(f.line for f, _ in report.findings)
+    assert lines == [4, 5, 11], report.findings

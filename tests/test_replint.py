@@ -1,0 +1,333 @@
+"""Self-test harness for the ``repro.analysis`` lint plane.
+
+Three layers:
+
+* fixture corpus (tests/data/replint_corpus/): good/bad snippets per rule,
+  both polarities, laid out like ``src/`` so path-scoped rules see the
+  exact relpaths they scope on;
+* pragma/baseline semantics: line-scoped suppression, content-addressed
+  occurrence-indexed keys, stale-entry reporting, byte-deterministic JSON;
+* seeded injection: copy the real ``src/`` tree, verify the CLI gate
+  passes, inject known-bad patterns, verify the gate fails.
+"""
+import json
+import os
+import shutil
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    DirtyNotifyRule,
+    JaxImportRule,
+    MirrorWriteRule,
+    PallasIndexRule,
+    SetIterRule,
+    TerminalStateRule,
+    UnseededRngRule,
+    WallClockRule,
+    default_rules,
+    run_analysis,
+)
+
+REPO = Path(__file__).parent.parent
+SRC = REPO / "src"
+CORPUS = Path(__file__).parent / "data" / "replint_corpus"
+BASELINE = REPO / "replint_baseline.json"
+
+
+def corpus_report(**kw):
+    return run_analysis(CORPUS, root_label="corpus", **kw)
+
+
+def by_file(report):
+    out = {}
+    for f, _key in report.findings:
+        out.setdefault(f.path, []).append((f.rule, f.line))
+    return {path: sorted(rows) for path, rows in out.items()}
+
+
+# --------------------------------------------------------------------------- #
+# Rule polarities over the fixture corpus                                     #
+# --------------------------------------------------------------------------- #
+EXPECTED = {
+    "repro/core/calendar.py": [("dirty-notify", 13), ("dirty-notify", 16)],
+    "repro/core/mirror_bad.py": [("mirror-sync", ln) for ln in (5, 6, 7, 8, 9)],
+    "repro/core/terminal_bad.py": [("terminal-state", 6), ("terminal-state", 7)],
+    "repro/core/policy.py": [("terminal-state", 11)],
+    "repro/core/determinism_bad.py": [
+        ("determinism-rng", 16), ("determinism-rng", 17),
+        ("determinism-rng", 18), ("determinism-rng", 19),
+        ("determinism-set-iter", 20), ("determinism-set-iter", 23),
+        ("determinism-set-iter", 26),
+        ("determinism-wallclock", 14), ("determinism-wallclock", 15),
+    ],
+    "repro/sim/pragma_cases.py": [("determinism-wallclock", 7)],
+    "repro/kernels/pallas_bad.py": [("pallas-index", 6), ("pallas-index", 7)],
+    "repro/serving/stream.py": [
+        ("jax-free-boundary", 2), ("jax-free-boundary", 3),
+        ("jax-free-boundary", 6),
+    ],
+}
+
+GOOD_FILES = [
+    "repro/core/mirror_good.py",
+    "repro/core/determinism_good.py",
+    "repro/kernels/pallas_good.py",
+    "repro/serving/__init__.py",
+    "repro/viz/plots.py",
+]
+
+
+def test_corpus_findings_exact():
+    report = corpus_report()
+    assert by_file(report) == {p: sorted(rows)
+                               for p, rows in EXPECTED.items()}
+    assert not report.gate_ok
+
+
+@pytest.mark.parametrize("rel", GOOD_FILES)
+def test_good_fixtures_are_clean(rel):
+    report = corpus_report(files=[CORPUS / rel])
+    assert not report.findings, report.findings
+
+
+def test_every_rule_fires_in_the_corpus():
+    """No shipped rule is vacuous: each one fires somewhere in the corpus.
+    (The negative polarity per rule is pinned by the exact-findings test:
+    every good fixture — and every good method inside the corpus
+    calendar.py for the single-file dirty-notify rule — stays unflagged.)"""
+    report = corpus_report()
+    fired = {f.rule for f, _ in report.findings} | {
+        f.rule for f in report.suppressed}
+    assert fired == {r.name for r in default_rules()}
+
+
+def test_settle_registry_override():
+    """The audited registry is constructor-overridable (corpus calendars /
+    forks can certify their own settle helpers)."""
+    rule = TerminalStateRule(settle={
+        "repro/core/terminal_bad.py": frozenset({"leak"}),
+    })
+    report = corpus_report(rules=[rule])
+    assert by_file(report) == {"repro/core/policy.py": [
+        ("terminal-state", 8), ("terminal-state", 11)]}
+
+
+# --------------------------------------------------------------------------- #
+# Pragma semantics                                                            #
+# --------------------------------------------------------------------------- #
+def test_pragma_scopes_to_flagged_line_only():
+    report = corpus_report(files=[CORPUS / "repro/sim/pragma_cases.py"],
+                           rules=[WallClockRule()])
+    assert [(f.rule, f.line) for f, _ in report.findings] == [
+        ("determinism-wallclock", 7)]
+    assert sorted(f.line for f in report.suppressed) == [6, 12]
+
+
+def test_pragma_wrong_rule_does_not_suppress(tmp_path):
+    mod = tmp_path / "repro" / "core" / "m.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text(textwrap.dedent("""\
+        import time
+
+        def f():
+            return time.time()  # replint: disable=determinism-rng (wrong rule)
+    """))
+    report = run_analysis(tmp_path, rules=[WallClockRule()])
+    assert [f.line for f, _ in report.findings] == [4]
+    assert not report.suppressed
+
+
+# --------------------------------------------------------------------------- #
+# Baseline semantics                                                          #
+# --------------------------------------------------------------------------- #
+def test_baseline_grandfathers_and_gate_passes():
+    first = corpus_report()
+    baseline = {key: "grandfathered for the corpus round-trip test"
+                for _f, key in first.findings}
+    second = corpus_report(baseline=baseline)
+    assert not second.findings
+    assert len(second.baselined) == len(first.findings)
+    assert not second.stale_baseline
+    assert second.gate_ok
+
+
+def test_stale_baseline_entry_fails_gate():
+    first = corpus_report()
+    baseline = {key: "ok" for _f, key in first.findings}
+    baseline["determinism-wallclock::repro/core/gone.py::x = time.time()::0"] = \
+        "this finding was fixed but the entry was not retired"
+    report = corpus_report(baseline=baseline)
+    assert report.stale_baseline == [
+        "determinism-wallclock::repro/core/gone.py::x = time.time()::0"]
+    assert not report.findings
+    assert not report.gate_ok
+
+
+def test_baseline_keys_survive_line_shifts(tmp_path):
+    """Content-addressed keys: inserting unrelated lines above a
+    grandfathered finding must not invalidate its baseline entry."""
+    mod = tmp_path / "repro" / "core" / "m.py"
+    mod.parent.mkdir(parents=True)
+    body = "import time\n\ndef f():\n    return time.time()\n"
+    mod.write_text(body)
+    key = run_analysis(tmp_path, rules=[WallClockRule()]).findings[0][1]
+    mod.write_text("# an unrelated comment\n# another\n" + body)
+    shifted = run_analysis(tmp_path, rules=[WallClockRule()],
+                           baseline={key: "attested"})
+    assert not shifted.findings
+    assert not shifted.stale_baseline
+    assert shifted.gate_ok
+
+
+def test_identical_lines_get_occurrence_indexed_keys(tmp_path):
+    mod = tmp_path / "repro" / "core" / "m.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text(textwrap.dedent("""\
+        import time
+
+        def f():
+            t = time.time()
+            t = time.time()
+            return t
+    """))
+    report = run_analysis(tmp_path, rules=[WallClockRule()])
+    keys = [key for _f, key in report.findings]
+    assert len(keys) == 2 and keys[0] != keys[1]
+    assert keys[0].endswith("::0") and keys[1].endswith("::1")
+    # baselining ONE occurrence leaves the other a live finding
+    partial = run_analysis(tmp_path, rules=[WallClockRule()],
+                           baseline={keys[0]: "first occurrence attested"})
+    assert [key for _f, key in partial.findings] == [keys[1]]
+    assert not partial.stale_baseline
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    mod = tmp_path / "repro" / "core" / "broken.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text("def f(:\n")
+    report = run_analysis(tmp_path)
+    assert [f.rule for f, _ in report.findings] == ["parse-error"]
+    assert not report.gate_ok
+
+
+# --------------------------------------------------------------------------- #
+# Deterministic report                                                        #
+# --------------------------------------------------------------------------- #
+def test_json_report_is_byte_deterministic(tmp_path):
+    a = corpus_report().to_json()
+    b = corpus_report().to_json()
+    assert a == b
+    # ... and independent of the absolute root the tree is scanned from
+    clone = tmp_path / "elsewhere"
+    shutil.copytree(CORPUS, clone)
+    c = run_analysis(clone, root_label="corpus").to_json()
+    assert c == a
+    # no absolute paths leak into the report
+    assert str(REPO) not in a and str(tmp_path) not in c
+    payload = json.loads(a)
+    assert payload["gate_ok"] is False
+    assert payload["counts"]["findings"] == sum(map(len, EXPECTED.values()))
+    assert payload["counts"]["suppressed"] == 3
+
+
+# --------------------------------------------------------------------------- #
+# The real tree: zero unbaselined findings at merge                           #
+# --------------------------------------------------------------------------- #
+def test_src_gate_is_clean_with_committed_baseline():
+    baseline = json.loads(BASELINE.read_text())
+    report = run_analysis(SRC, baseline=baseline, root_label="src")
+    assert not report.findings, "\n".join(
+        f"{f.path}:{f.line}: {f.rule}: {f.message}"
+        for f, _ in report.findings)
+    assert not report.stale_baseline
+    assert report.gate_ok
+    # the committed baseline carries ONLY attested timing telemetry
+    assert all(f.rule == "determinism-wallclock"
+               for f, _k, _j in report.baselined)
+
+
+# --------------------------------------------------------------------------- #
+# CLI + seeded injection                                                      #
+# --------------------------------------------------------------------------- #
+def _cli(*args, **kw):
+    env = dict(os.environ, PYTHONPATH=str(SRC))
+    return subprocess.run([sys.executable, "-m", "repro.analysis", *args],
+                          capture_output=True, text=True, env=env,
+                          cwd=REPO, **kw)
+
+
+def test_cli_list_rules():
+    proc = _cli("--list-rules")
+    assert proc.returncode == 0
+    listed = {line.split(":", 1)[0] for line in proc.stdout.splitlines()}
+    assert listed == {r.name for r in default_rules()}
+
+
+def test_cli_gate_passes_on_src_within_budget():
+    proc = _cli("--gate", "--budget-s", "10")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert " 0 finding(s)" in proc.stdout
+
+
+def test_cli_budget_exceeded_exits_2():
+    proc = _cli("--budget-s", "0")
+    assert proc.returncode == 2
+    assert "budget exceeded" in proc.stderr
+
+
+def test_cli_json_report_is_stable_across_runs(tmp_path):
+    out1, out2 = tmp_path / "r1.json", tmp_path / "r2.json"
+    assert _cli("--json", str(out1)).returncode == 0
+    assert _cli("--json", str(out2)).returncode == 0
+    assert out1.read_bytes() == out2.read_bytes()
+
+
+@pytest.fixture()
+def src_clone(tmp_path):
+    clone = tmp_path / "src"
+    shutil.copytree(SRC, clone)
+    return clone
+
+
+def _clone_gate(clone):
+    return _cli("--gate", "--root", str(clone),
+                "--baseline", str(BASELINE))
+
+
+def test_injection_clean_clone_passes(src_clone):
+    proc = _clone_gate(src_clone)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+@pytest.mark.parametrize("rel,snippet,rule", [
+    ("repro/core/scheduler.py",
+     "\n\ndef _injected_probe():\n    import time\n    return time.time()\n",
+     "determinism-wallclock"),
+    ("repro/sim/scenarios.py",
+     "\n\ndef _injected_clobber(dev):\n    dev._sky.clear()\n",
+     "mirror-sync"),
+    ("repro/core/task.py",
+     "\n\ndef _injected_settle(task):\n"
+     "    task.state = TaskState.FAILED\n",
+     "terminal-state"),
+    ("repro/core/metrics.py",
+     "\n\ndef _injected_order(seen):\n    pending = set(seen)\n"
+     "    return [s for s in pending]\n",
+     "determinism-set-iter"),
+    ("repro/serving/stream.py",
+     "\nimport jax\n",
+     "jax-free-boundary"),
+])
+def test_injection_gate_fails(src_clone, rel, snippet, rule):
+    """Seeded injection: the gate MUST fail when a known-bad pattern is
+    introduced anywhere in the scanned tree."""
+    target = src_clone / rel
+    target.write_text(target.read_text() + snippet)
+    proc = _clone_gate(src_clone)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert rule in proc.stdout
