@@ -9,7 +9,10 @@ sketches, so RSS at request 10^6 must match RSS at request 10^5.
 Default configuration is the trajectory point committed as
 ``BENCH_7.json``: **1M requests over a 1024-device network**.  ``--smoke``
 is the CI tier (50k requests, 64 devices) gated on RSS flatness and p99
-admission latency.
+admission latency.  ``--churn`` layers a seeded device-churn schedule
+(DESIGN.md §16) on top — failures, drains, rejoins — and additionally
+gates on the orphan-recovery ratio; the committed churn-tier trajectory
+point is ``BENCH_9.json``.
 
 The timing model is a serve-style profile (tens-of-ms tasks, multi-GB/s
 link), not the paper's RPi2B constants: the paper's 16.3 MB/s link with
@@ -38,6 +41,7 @@ from repro.core.network import NetworkConfig  # noqa: E402
 from repro.core.profiles import TaskProfile, WorkloadSpec  # noqa: E402
 from repro.core.task import reset_id_counters  # noqa: E402
 from repro.serving.stream import StreamingEngine  # noqa: E402
+from repro.sim.churn import ChurnConfig, ChurnInjector  # noqa: E402
 from repro.sim.openended import FirehoseConfig, firehose  # noqa: E402
 
 _PAGE = resource.getpagesize()
@@ -53,6 +57,16 @@ RSS_REL = 0.10
 # headroom for noisy shared runners while still catching an O(n) or
 # leak-driven collapse.
 P99_ADMISSION_GATE_S = 0.050
+# Churn-tier gate (DESIGN.md §16): under sustained device churn the run
+# must still re-place at least this fraction of orphaned work.  The
+# global ratio includes inherently-unrecoverable HP orphans (HP is
+# source-local: the orphan of a hard-failed source can never re-admit),
+# so the floor sits well below 1.0.
+CHURN_RECOVERY_FLOOR = 0.25
+# Expected fraction of the fleet hard-failing / draining over the churn
+# tier's active span (the middle 80% of the run's virtual horizon).
+CHURN_FAIL_FRAC = 0.10
+CHURN_DRAIN_FRAC = 0.05
 
 
 def rss_bytes() -> float:
@@ -78,6 +92,21 @@ def soak_network() -> NetworkConfig:
                          workload=spec)
 
 
+def churn_schedule_for(requests: int, devices: int, rate: float,
+                       seed: int) -> ChurnInjector:
+    """Seeded churn sized to the soak run: CHURN_FAIL_FRAC of the fleet
+    hard-fails (and CHURN_DRAIN_FRAC drains) across the middle 80% of
+    the run's virtual horizon, everything rejoining after 2 s."""
+    horizon = requests / rate
+    span = 0.8 * horizon
+    return ChurnInjector(ChurnConfig(
+        name="soak_churn", n_devices=devices,
+        fail_rate=CHURN_FAIL_FRAC * devices / span,
+        drain_rate=CHURN_DRAIN_FRAC * devices / span,
+        rejoin=True, rejoin_delay=2.0,
+        start=0.1 * horizon, duration=span, seed=seed))
+
+
 def run_soak(
     *,
     requests: int,
@@ -88,6 +117,7 @@ def run_soak(
     shed: str,
     policy: str,
     seed: int,
+    churn: bool = False,
     progress: bool = True,
 ) -> dict:
     reset_id_counters()
@@ -97,6 +127,8 @@ def run_soak(
     cfg = FirehoseConfig(
         name="soak", n_devices=devices, rate=rate,
         lp_fraction=0.4, lp_set_sizes=(1, 2, 3, 4), seed=seed)
+    injector = churn_schedule_for(requests, devices, rate, seed) \
+        if churn else None
 
     expected_windows = max(1, int(requests / (rate * window)))
     stride = max(1, expected_windows // 256)
@@ -115,7 +147,8 @@ def run_soak(
 
     rss_series.append(rss_bytes())
     t0 = time.perf_counter()
-    report = eng.run(firehose(cfg, limit=requests), on_window=on_window)
+    report = eng.run(firehose(cfg, limit=requests), on_window=on_window,
+                     churn=iter(injector) if injector is not None else None)
     wall = time.perf_counter() - t0
     rss_series.append(rss_bytes())
 
@@ -133,9 +166,20 @@ def run_soak(
     slo = tel["slo"]
     attain = (sum(r["attained"] for r in slo.values())
               / max(1, sum(r["attained"] + r["missed"] for r in slo.values())))
+    orphans = m.get("orphans_created", 0)
+    recovered = m.get("orphans_recovered", 0)
     return {
-        "config": f"{devices}dev_{requests}req_{shed}_{policy}",
+        "config": f"{devices}dev_{requests}req_{shed}_{policy}"
+                  + ("_churn" if churn else ""),
         "report": report,
+        "churn": churn,
+        "churn_events": len(injector) if injector is not None else 0,
+        "devices_failed": m.get("device_failures", 0),
+        "devices_drained": m.get("device_drains", 0),
+        "devices_rejoined": m.get("device_rejoins", 0),
+        "orphans_created": orphans,
+        "orphans_recovered": recovered,
+        "recovery_ratio": (recovered / orphans) if orphans else 1.0,
         "requests": requests,
         "wall_s": wall,
         "req_per_s_wall": requests / wall if wall > 0 else 0.0,
@@ -179,9 +223,14 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="CI tier: 50k requests over 64 devices")
+    ap.add_argument("--churn", action="store_true",
+                    help="churn tier (DESIGN.md §16): inject seeded device "
+                         "failures/drains/rejoins; with --gate, also gate "
+                         "on orphan recovery")
     ap.add_argument("--gate", action="store_true",
                     help="exit non-zero on RSS growth or p99 admission "
-                         "latency beyond the gates")
+                         "latency beyond the gates (with --churn: also on "
+                         "the orphan-recovery floor)")
     ap.add_argument("--json", metavar="PATH", default=None)
     args = ap.parse_args()
 
@@ -192,11 +241,12 @@ def main() -> None:
 
     print(f"# soak: {args.requests} requests, {args.devices} devices, "
           f"rate={rate:g}/s, window={args.window}s, queue={args.queue}, "
-          f"shed={args.shed}, policy={args.policy}", flush=True)
+          f"shed={args.shed}, policy={args.policy}"
+          f"{', churn tier' if args.churn else ''}", flush=True)
     res = run_soak(
         requests=args.requests, devices=args.devices, rate=rate,
         window=args.window, queue=args.queue, shed=args.shed,
-        policy=args.policy, seed=args.seed)
+        policy=args.policy, seed=args.seed, churn=args.churn)
 
     skip = {"report", "config"}
     for k, v in res.items():
@@ -246,10 +296,18 @@ def main() -> None:
                 f"> {P99_ADMISSION_GATE_S * 1e6:.0f} us")
         if res["unresolved"]:
             failures.append(f"{res['unresolved']} unresolved tasks")
+        if args.churn:
+            if res["devices_failed"] == 0:
+                failures.append("churn tier fired zero device failures")
+            if res["recovery_ratio"] < CHURN_RECOVERY_FLOOR:
+                failures.append(
+                    f"recovery_ratio {res['recovery_ratio']:.3f} < "
+                    f"floor {CHURN_RECOVERY_FLOOR}")
         if failures:
             print("# GATE FAIL: " + "; ".join(failures))
             sys.exit(1)
-        print("# GATE PASS: RSS flat, admission p99 within bound")
+        print("# GATE PASS: RSS flat, admission p99 within bound"
+              + (", orphan recovery above floor" if args.churn else ""))
 
 
 if __name__ == "__main__":

@@ -39,6 +39,7 @@ SETTLE_HELPERS: dict[str, frozenset[str]] = {
         "PolicyDispatcher._account_lp",
         "PolicyDispatcher._violate",
         "PolicyDispatcher.task_finished",
+        "CalendarPolicy.fail_device",
         "EDFOnlyPolicy.decide_lp_batch",
         "EDFOnlyPolicy.reallocate",
     }),
@@ -47,6 +48,7 @@ SETTLE_HELPERS: dict[str, frozenset[str]] = {
         "PreemptionAwareScheduler.allocate_low_priority",
         "PreemptionAwareScheduler.allocate_low_priority_batch",
         "PreemptionAwareScheduler.reallocate",
+        "PreemptionAwareScheduler.settle_hp_orphans",
     }),
     "repro/core/workstealer.py": frozenset({
         "WorkstealingPolicy._kill_if_late",

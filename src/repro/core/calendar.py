@@ -60,6 +60,7 @@ tests/test_skyline_fuzz.py, tests/test_scenario_replay.py):
 """
 from __future__ import annotations
 
+import enum
 import heapq
 import itertools
 import math
@@ -74,6 +75,22 @@ from .task import Priority, Task
 EPS = 1e-9
 _INF = math.inf
 _EMPTY_F = np.empty(0, dtype=np.float64)
+
+
+class DeviceLifecycle(enum.Enum):
+    """Churn lifecycle of one edge device (DESIGN.md §16).
+
+    UP devices accept new placements.  DRAINING devices finish their
+    in-flight reservations but take no new work.  DOWN devices are gone:
+    the transition cleared their calendar and every in-flight reservation
+    became an *orphan* (returned by :meth:`NetworkState.fail_device` for
+    the recovery pass).  The integer values are the checkpoint encoding
+    (checkpoint/lifecycle.py) — never reorder them.
+    """
+
+    UP = 0
+    DRAINING = 1
+    DOWN = 2
 
 
 @dataclass
@@ -639,6 +656,7 @@ class DeviceCalendar:
     def __init__(self, device: int, capacity: int = 4) -> None:
         self.device = device
         self.capacity = capacity
+        self.lifecycle = DeviceLifecycle.UP
         self._res: dict[object, Reservation] = {}
         self._sky = _StepFn()
         self._t2s: np.ndarray = _EMPTY_F        # sorted completion times
@@ -650,6 +668,12 @@ class DeviceCalendar:
 
     def __len__(self) -> int:
         return len(self._res)
+
+    @property
+    def is_up(self) -> bool:
+        """True when the device accepts new placements (UP — DRAINING and
+        DOWN devices are both closed to admission)."""
+        return self.lifecycle is DeviceLifecycle.UP
 
     def reservations(self) -> Iterable[Reservation]:
         return self._res.values()
@@ -811,6 +835,18 @@ class DeviceCalendar:
             self._lp.gc(now)
         self._touch()
 
+    def clear(self) -> None:
+        """Wipe every reservation (device loss, or a rejoin after one):
+        fresh skyline, empty expiry heap, dropped mirrors.  Stale entries
+        this device left in the ``NetworkState`` gc heap stay behind and
+        resolve as no-ops when popped."""
+        self._res.clear()
+        self._sky = _StepFn()
+        self._t2s = _EMPTY_F
+        self._expiry = []
+        self._lp = None
+        self._touch()
+
 
 class _ProbePlane:
     """The network-wide probe plane: every device skyline mirrored into
@@ -843,6 +879,9 @@ class _ProbePlane:
 
     def _alloc(self) -> None:
         d, w, t = self._d, self._w, self._t
+        self.alive = np.fromiter(
+            (dev.lifecycle is DeviceLifecycle.UP
+             for dev in self._state.devices), np.bool_, d)
         self.times = np.full((d, w + 1), _INF)  # +1 spare col: "next" gathers
         self.vals = np.zeros((d, w), dtype=np.int64)
         self.prefix = np.zeros((d, w + 1))      # per-row usage-mass prefixes
@@ -899,6 +938,7 @@ class _ProbePlane:
         times, vals, t2pad = self.times, self.vals, self.t2pad
         for idx in dirty:
             dev = devices[idx]
+            self.alive[idx] = dev.lifecycle is DeviceLifecycle.UP
             sf = dev._sky
             st, sv = sf._view()
             n = sf.n
@@ -980,15 +1020,17 @@ class _ProbePlane:
     def fits_mask(self, t1: float, t2: float, cores: int) -> np.ndarray:
         """Stacked ``DeviceCalendar.fits`` — integer-exact via the per-cores
         blocked-count prefixes: a window hosts ``cores`` more cores iff it
-        spans zero blocked segments."""
+        spans zero blocked segments.  Non-UP rows are masked out: admission
+        must never place onto a DRAINING/DOWN device (with every device UP
+        the mask is all-ones, so churn-free answers are bit-identical)."""
         a, b = t1 + EPS, t2 - EPS
         if b <= a:
-            return np.ones(self._d, dtype=bool)
+            return self.alive.copy()
         i1 = self._count_below(a, strict=False) - 1
         i2 = self._count_below(b, strict=True)
         bc = self._blocked_counts(cores)
         rows = self._rows
-        return bc[rows, i2] == bc[rows, i1]
+        return (bc[rows, i2] == bc[rows, i1]) & self.alive
 
     def loads(self, t1: float, t2: float) -> np.ndarray:
         """Stacked ``DeviceCalendar.load`` over [t1, t2): locate the window
@@ -1048,8 +1090,10 @@ class _ProbePlane:
         res = np.where(use_t, not_before, t[rows, j])
         # rows that can never host ``cores`` (capacity too small) have no
         # candidate at all — match the scalar first_fit's +inf guard
-        # instead of leaking the argmax-of-nothing -inf sentinel
-        return np.where(self.capacity < cores, _INF, res)
+        # instead of leaking the argmax-of-nothing -inf sentinel.  Non-UP
+        # rows are masked to +inf the same way: a DRAINING/DOWN device
+        # never offers a start instant to admission.
+        return np.where((self.capacity < cores) | ~self.alive, _INF, res)
 
     # -- completion-time plane -------------------------------------------- #
     def completion_array(self, after: float, before: float) -> np.ndarray:
@@ -1077,10 +1121,15 @@ class ProbeWindow:
     free_cores: np.ndarray                      # (D,) ints
     loads: np.ndarray                           # (D,) usage-seconds
     _capacity: np.ndarray
+    alive: Optional[np.ndarray] = None          # (D,) bool (None: all UP)
 
     def fits(self, cores: int) -> np.ndarray:
-        """(D,) bool mask: which devices can host ``cores`` over the window."""
-        return self.free_cores >= cores
+        """(D,) bool mask: which devices can host ``cores`` over the window
+        (non-UP devices never fit)."""
+        mask = self.free_cores >= cores
+        if self.alive is not None:
+            mask &= self.alive
+        return mask
 
 
 @dataclass
@@ -1127,7 +1176,7 @@ class NetworkState:
         if t1 is None:
             return plane
         return ProbeWindow(t1, t2, plane.free_cores(t1, t2),
-                           plane.loads(t1, t2), plane.capacity)
+                           plane.loads(t1, t2), plane.capacity, plane.alive)
 
     def completion_times(self, after: float, before: float) -> list[float]:
         """Sorted unique completion time-points in (after, before), network
@@ -1160,6 +1209,79 @@ class NetworkState:
 
     def total_allocated_tasks(self) -> int:
         return sum(len(d) for d in self.devices)
+
+    # -- device lifecycle (churn plane, DESIGN.md §16) ------------------ #
+    def alive_mask(self) -> np.ndarray:
+        """(D,) bool: which devices accept new placements (UP only)."""
+        return np.fromiter(
+            (d.lifecycle is DeviceLifecycle.UP for d in self.devices),
+            np.bool_, len(self.devices))
+
+    def lifecycle_codes(self) -> np.ndarray:
+        """(D,) int8 lifecycle codes (the checkpoint encoding —
+        checkpoint/lifecycle.py round-trips this array)."""
+        return np.fromiter(
+            (d.lifecycle.value for d in self.devices),
+            np.int8, len(self.devices))
+
+    def apply_lifecycle_codes(self, codes) -> None:
+        """Restore per-device lifecycles from :meth:`lifecycle_codes`.
+
+        A device restored as DOWN gets its calendar cleared (a DOWN device
+        by invariant holds no reservations); every changed device is
+        dirty-marked so the probe plane's alive mask refreshes."""
+        codes = np.asarray(codes)
+        if codes.shape != (len(self.devices),):
+            raise ValueError(
+                f"lifecycle codes shape {codes.shape} != "
+                f"({len(self.devices)},)")
+        for dev, code in zip(self.devices, codes.tolist()):
+            lc = DeviceLifecycle(int(code))
+            if lc is dev.lifecycle:
+                continue
+            if lc is DeviceLifecycle.DOWN:
+                dev.clear()
+            dev.lifecycle = lc
+            self._dirty.add(dev.device)
+
+    def fail_device(self, idx: int, now: float) -> list[Task]:
+        """Hard-fail device ``idx``: mark it DOWN, clear its calendar, and
+        return every in-flight task it was hosting (the *orphans*, sorted
+        by task id for a deterministic recovery order).
+
+        Finished work is retired first (``gc``), so only reservations still
+        running at — or starting after — ``now`` orphan.  Link slots,
+        dispatcher exec events, and terminal accounting for the orphans are
+        the policy layer's job (scheduler ``fail_device`` / policy
+        ``fail_device``); this method only mutates the calendar plane."""
+        dev = self.devices[idx]
+        dev.gc(now)
+        orphans = [r.tag for r in dev.reservations()
+                   if isinstance(r.tag, Task)]
+        dev.clear()
+        dev.lifecycle = DeviceLifecycle.DOWN
+        self._dirty.add(idx)
+        orphans.sort(key=lambda t: t.task_id)
+        return orphans
+
+    def drain_device(self, idx: int) -> None:
+        """Gracefully drain device ``idx``: no new placements, but every
+        in-flight reservation runs to completion (no orphans)."""
+        dev = self.devices[idx]
+        if dev.lifecycle is DeviceLifecycle.DOWN:
+            raise ValueError(f"device {idx} is DOWN; rejoin before draining")
+        dev.lifecycle = DeviceLifecycle.DRAINING
+        self._dirty.add(idx)
+
+    def rejoin_device(self, idx: int) -> None:
+        """Bring device ``idx`` back to UP.  A DOWN device rejoins with a
+        cleared calendar (its pre-failure reservations were orphaned at the
+        failure); cancelling a drain keeps the calendar — nothing was lost."""
+        dev = self.devices[idx]
+        if dev.lifecycle is DeviceLifecycle.DOWN:
+            dev.clear()                 # defensive: fail_device cleared it
+        dev.lifecycle = DeviceLifecycle.UP
+        self._dirty.add(idx)
 
     def gc(self, now: float) -> None:
         """Garbage-collect every resource to ``now``.

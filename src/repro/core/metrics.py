@@ -54,6 +54,19 @@ class Metrics:
     lp_shed: int = 0
     lp_degraded: int = 0
 
+    # Churn plane (DESIGN.md §16) — device lifecycle events and orphan
+    # recovery.  Orphans are NOT a new terminal bucket: a recovered orphan
+    # counts realloc_success (then completes or fails at runtime like any
+    # allocation), an unrecoverable LP orphan counts realloc_failure, and a
+    # non-re-admittable HP orphan counts hp_failed_alloc — the existing
+    # partition absorbs all of them.  These counters are observability
+    # only; always zero (and omitted from summaries) without churn.
+    device_failures: int = 0
+    device_drains: int = 0
+    device_rejoins: int = 0
+    orphans_created: int = 0
+    orphans_recovered: int = 0
+
     # Fig 7, Table 3 — preemption
     preemptions: int = 0
     preempted_by_cores: Counter = field(default_factory=Counter)
@@ -143,6 +156,15 @@ class Metrics:
             out["hp_shed"] = self.hp_shed
             out["lp_shed"] = self.lp_shed
             out["lp_degraded"] = self.lp_degraded
+        if (self.device_failures or self.device_drains
+                or self.device_rejoins or self.orphans_created):
+            # Present only under churn: the closed-workload golden replays
+            # (and every churn-free run) keep their historic key set.
+            out["device_failures"] = self.device_failures
+            out["device_drains"] = self.device_drains
+            out["device_rejoins"] = self.device_rejoins
+            out["orphans_created"] = self.orphans_created
+            out["orphans_recovered"] = self.orphans_recovered
         if self.task_type_counts:
             # Present only for heterogeneous workloads: single-model (paper)
             # summaries keep their historic key set, which the golden-replay

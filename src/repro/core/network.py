@@ -16,6 +16,12 @@ from dataclasses import dataclass, field
 from functools import cached_property
 from typing import Optional
 
+# Device lifecycle states (churn plane, DESIGN.md §16).  The states and the
+# fail_device / drain_device / rejoin_device mutation API live on the
+# calendar layer's NetworkState (core/calendar.py), next to the calendars
+# they clear; re-exported here because this module is the network model's
+# public face.
+from .calendar import DeviceLifecycle, NetworkState  # noqa: F401
 from .profiles import PAPER_TYPE, TaskProfile, WorkloadSpec, get_workload
 
 

@@ -244,9 +244,15 @@ class OracleInstance:
             )
             for j in jobs
         ) + FEAS
-        profiles = {
-            d.device: d.usage_segments(now, horizon) for d in state.devices
-        }
+        profiles = {}
+        for d in state.devices:
+            if getattr(d, "is_up", True):
+                profiles[d.device] = d.usage_segments(now, horizon)
+            else:
+                # DRAINING/DOWN devices take no new placements: present a
+                # saturated profile so no placement option ever fits there.
+                profiles[d.device] = (np.array([now]),
+                                      np.array([d.capacity], dtype=np.int64))
         link_profile = state.link.usage_segments(now, horizon)
         return cls(jobs, profiles, link_profile,
                    capacity=state.devices[0].capacity if state.devices
@@ -761,6 +767,9 @@ class OraclePolicy(CalendarPolicy):
         self.state.gc(now)
         prof = self.net.profile(task.task_type)
         dev = self.state.devices[task.source_device]
+        if not dev.is_up:
+            # HP runs on its (DRAINING/DOWN) home device only: reject.
+            return Decision(DecisionStatus.REJECTED, failed=[task])
         t1 = dev.earliest_fit(prof.hp_slot_time, now, 1)
         if t1 + prof.hp_exec > task.deadline:
             return Decision(DecisionStatus.REJECTED, failed=[task])

@@ -49,6 +49,7 @@ the runtimes (see ``EDFOnlyPolicy`` below).
 from __future__ import annotations
 
 import enum
+import math
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
@@ -161,6 +162,22 @@ class SchedulingPolicy:
     def reallocate(self, task: Task, now: float) -> Decision:
         return Decision(DecisionStatus.REJECTED, failed=[task])
 
+    # -- device churn (DESIGN.md §16) ----------------------------------- #
+    def fail_device(self, idx: int, now: float) -> Decision:
+        """Hard-fail device ``idx``; the returned Decision carries every
+        orphaned task in ``preempted``, recovered LP orphans' replacement
+        slots in ``reallocations``, and unrecoverable LP orphans in
+        ``failed``.  Default: no-op — policies without a shared calendar
+        view (the workstealing baselines own plain worker objects) have no
+        device lifecycle, so churn cannot orphan their tasks."""
+        return Decision(DecisionStatus.ADMITTED)
+
+    def drain_device(self, idx: int, now: float) -> None:
+        """Stop placing new work on device ``idx`` (no-op by default)."""
+
+    def rejoin_device(self, idx: int, now: float) -> None:
+        """Return device ``idx`` to the placement pool (no-op by default)."""
+
     # -- structured outcome events ------------------------------------- #
     def on_preempt(self, task: Task, now: float) -> None:
         """The runtime externally stopped ``task`` (before ``reallocate``)."""
@@ -247,6 +264,12 @@ class DispatchClient:
         completion or slot violation) — the failure-side counterpart of the
         ``on_*_complete`` hooks, so open-ended runtimes can settle their
         per-request bookkeeping without a final sweep."""
+
+    def on_device_lost(self, task: Task) -> None:
+        """A device failure orphaned ``task``.  Fires before recovery is
+        attempted: the task may still be re-placed elsewhere, re-admitted
+        (HP), or settled FAILED — terminal bookkeeping arrives through the
+        usual completion/failure hooks afterwards."""
 
 
 class PolicyDispatcher:
@@ -377,6 +400,47 @@ class PolicyDispatcher:
         for failed in dec.failed:
             self.client.on_admit_fail(failed)
         return dec
+
+    # ------------------------------------------------------------------ #
+    # Device churn (lifecycle events -> policy + client plumbing)        #
+    # ------------------------------------------------------------------ #
+    def device_lost(self, idx: int) -> Decision:
+        """A device vanished: orphan its in-flight tasks and drive recovery.
+
+        The policy's ``fail_device`` clears the calendar, cancels the
+        orphans' pending link slots, and settles LP orphans through its
+        reallocation path (ALLOCATED elsewhere or FAILED).  Here the
+        orphans' pending exec events are cancelled (they describe compute
+        on hardware that no longer exists), the client is notified per
+        orphan, recovered slots are armed, and HP orphans are re-admitted
+        immediately — ahead of the next admission window; a rejected
+        re-admission settles through ``submit_hp``'s normal failure path
+        (``hp_generated`` is counted at request creation, so re-submitting
+        the same task keeps the terminal partition exact)."""
+        dec = self.policy.fail_device(idx, self.q.now)
+        hp_orphans: list[Task] = []
+        for task in dec.preempted:          # every orphan, HP and LP
+            ev = self._exec_events.pop(task, None)
+            if ev is not None:
+                ev.cancel()
+            self.client.on_device_lost(task)
+            if task.priority == Priority.HIGH:
+                hp_orphans.append(task)
+        for alloc in dec.reallocations:     # recovered LP orphans
+            self._schedule_exec(alloc)
+        for task in dec.failed:             # unrecoverable LP orphans
+            self.client.on_admit_fail(task)
+        for task in hp_orphans:
+            sub = self.submit_hp(task)
+            if not sub.rejected:
+                self.metrics.orphans_recovered += 1
+        return dec
+
+    def device_drained(self, idx: int) -> None:
+        self.policy.drain_device(idx, self.q.now)
+
+    def device_rejoined(self, idx: int) -> None:
+        self.policy.rejoin_device(idx, self.q.now)
 
     # ------------------------------------------------------------------ #
     # Slot execution                                                     #
@@ -514,6 +578,47 @@ class CalendarPolicy(SchedulingPolicy):
         busy = max(0, dev.max_usage(alloc.t_start, alloc.t_end) - alloc.cores)
         return busy / dev.capacity
 
+    # -- device churn (DESIGN.md §16): generic calendar-backed handling - #
+    def fail_device(self, idx: int, now: float) -> Decision:
+        """Generic churn handling for calendar-backed policies: clear the
+        device, cancel the orphans' still-pending link slots (when the
+        policy keeps a link-slot registry), and route each LP orphan
+        through the policy's own ``reallocate`` settle.  An orphan whose
+        policy offers no reallocation path (the protocol default rejects
+        without settling) is settled FAILED here — never stranded.  HP
+        orphans come back PREEMPTED in ``preempted`` for the dispatcher's
+        immediate re-admission."""
+        orphans = self.state.fail_device(idx, now)
+        links = getattr(self, "links", None)
+        for task in orphans:
+            if links is not None:
+                links.cancel_pending(self.state.link, task.task_id, now)
+            task.state = TaskState.PREEMPTED
+        dec = Decision(DecisionStatus.ADMITTED, preempted=list(orphans))
+        for task in orphans:
+            if task.priority == Priority.HIGH:
+                continue
+            sub = self.reallocate(task, now)
+            dec.reallocations.extend(sub.allocations)
+            if task.state is TaskState.ALLOCATED:
+                continue
+            if task.state is not TaskState.FAILED:
+                task.state = TaskState.FAILED
+                self.metrics.realloc_failure += 1
+            dec.failed.append(task)
+        self.metrics.device_failures += 1
+        self.metrics.orphans_created += len(orphans)
+        self.metrics.orphans_recovered += len(dec.reallocations)
+        return dec
+
+    def drain_device(self, idx: int, now: float) -> None:
+        self.state.drain_device(idx)
+        self.metrics.device_drains += 1
+
+    def rejoin_device(self, idx: int, now: float) -> None:
+        self.state.rejoin_device(idx)
+        self.metrics.device_rejoins += 1
+
 
 @register_policy("scheduler")
 class SchedulerPolicy(CalendarPolicy):
@@ -550,6 +655,22 @@ class SchedulerPolicy(CalendarPolicy):
             return Decision(DecisionStatus.REJECTED, failed=[task])
         return Decision(DecisionStatus.ADMITTED, allocations=[alloc],
                         predicted_completion=alloc.t_end)
+
+    def fail_device(self, idx: int, now: float) -> Decision:
+        # The scheduler's own churn pass: batch victim reallocation with
+        # one shared placement context (cheaper than the generic per-orphan
+        # path when a loaded device dies), identical settle semantics.
+        orphans, reallocs = self.sched.fail_device(idx, now)
+        return Decision(
+            DecisionStatus.ADMITTED, preempted=orphans,
+            reallocations=reallocs,
+            failed=[t for t in orphans if t.state is TaskState.FAILED])
+
+    def drain_device(self, idx: int, now: float) -> None:
+        self.sched.drain_device(idx, now)
+
+    def rejoin_device(self, idx: int, now: float) -> None:
+        self.sched.rejoin_device(idx, now)
 
 
 @register_policy("no_offload")
@@ -588,6 +709,9 @@ class EDFOnlyPolicy(CalendarPolicy):
         self.state.gc(now)
         self.links.prune(now)
         dev = self.state.devices[task.source_device]
+        if not dev.is_up:
+            # HP runs on its (DRAINING/DOWN) home device only: reject.
+            return Decision(DecisionStatus.REJECTED, failed=[task])
         msg_dur = net.slot(net.msg.hp_alloc)
         msg_t1 = link.earliest_slot(msg_dur, now)
         arrival = msg_t1 + msg_dur
@@ -618,12 +742,15 @@ class EDFOnlyPolicy(CalendarPolicy):
         msg_t1 = link.earliest_slot(msg_dur, now)
         arrival = msg_t1 + msg_dur
         sdev = self.state.devices[task.source_device]
-        best_dev, best_t1, offloaded = sdev, sdev.earliest_fit(proc, arrival, cores), False
+        best_dev, best_t1, offloaded = (
+            sdev,
+            sdev.earliest_fit(proc, arrival, cores) if sdev.is_up else math.inf,
+            False)
         xfer_dur = net.slot(prof.input_bytes)
         xfer_t1 = link.earliest_slot(xfer_dur, arrival)
         t1_off = xfer_t1 + xfer_dur
         for d in self.state.devices:
-            if d is sdev:
+            if d is sdev or not d.is_up:
                 continue
             t1 = d.earliest_fit(proc, t1_off, cores)
             if t1 < best_t1:

@@ -68,6 +68,13 @@ from .victims import GOOD_STATES, rank_victims, victim_sort_key
 VICTIM_POLICIES = ("farthest_deadline", "weakest_set")
 
 
+def _dev_up(dev) -> bool:
+    """Placement eligibility of one device calendar.  The seed reference
+    calendars (calendar_reference) predate the lifecycle plane and are
+    treated as always UP."""
+    return getattr(dev, "is_up", True)
+
+
 @dataclass
 class Allocation:
     """A committed placement decision for a single task."""
@@ -280,6 +287,10 @@ class PreemptionAwareScheduler:
     def _hp_inner(self, task: Task, now: float) -> HPResult:
         net, link = self.net, self.state.link
         dev = self.state.devices[task.source_device]
+        if not _dev_up(dev):
+            # HP execution is source-local (paper rule): a DRAINING/DOWN
+            # home device takes no new placements, so admission fails.
+            return HPResult(False)
         prof = net.profile(task.task_type)
         msg_dur = net.slot(net.msg.hp_alloc)
 
@@ -956,6 +967,69 @@ class PreemptionAwareScheduler:
             self.metrics.realloc_failure += 1
         return alloc
 
+    # ------------------------------------------------------------------ #
+    # Device churn (DESIGN.md §16)                                       #
+    # ------------------------------------------------------------------ #
+    def fail_device(self, idx: int, now: float) -> tuple[list[Task],
+                                                         list[Allocation]]:
+        """Hard-fail a device: orphan its in-flight tasks and drive recovery.
+
+        Every orphan's still-pending link slots are cancelled exactly like
+        preemption's slot cleanup; LP orphans then go through the batch
+        victim-reallocation pass (one shared placement context — the PR 5
+        plane), so each terminates ALLOCATED-elsewhere-before-deadline or
+        FAILED.  HP orphans come back PREEMPTED for immediate re-admission
+        — the dispatcher's ``device_lost`` (or ``settle_hp_orphans`` on
+        scheduler-direct drivers) settles them.  Returns
+        ``(orphans, lp_reallocations)``.
+        """
+        self.state.gc(now)
+        self.links.prune(now)
+        orphans = self.state.fail_device(idx, now)
+        link = self.state.link
+        lp_orphans: list[Task] = []
+        for task in orphans:
+            self.links.cancel_pending(link, task.task_id, now)
+            task.state = TaskState.PREEMPTED    # transient, like an eviction
+            if task.priority == Priority.LOW:
+                lp_orphans.append(task)
+        self.metrics.device_failures += 1
+        self.metrics.orphans_created += len(orphans)
+        reallocs = self._reallocate_victims(lp_orphans, now)
+        self.metrics.orphans_recovered += len(reallocs)
+        return orphans, reallocs
+
+    def settle_hp_orphans(self, orphans: Sequence[Task],
+                          now: float) -> list[HPResult]:
+        """Re-admit HP orphans immediately — ahead of the next admission
+        window.  HP execution is source-local (paper rule), so an orphan
+        whose home device stays DOWN settles FAILED (``hp_failed_alloc``);
+        an orphan is never left stranded in PREEMPTED."""
+        results: list[HPResult] = []
+        for task in orphans:
+            if task.priority != Priority.HIGH:
+                continue
+            res = self.allocate_high_priority(task, now)
+            if res.success:
+                self.metrics.orphans_recovered += 1
+            else:
+                task.state = TaskState.FAILED
+                self.metrics.hp_failed_alloc += 1
+                self.metrics.count_type(task.task_type, "hp_failed_alloc")
+            results.append(res)
+        return results
+
+    def drain_device(self, idx: int, now: float) -> None:
+        """Graceful drain: in-flight reservations finish, no new placements
+        (the probe plane's alive mask excludes the device immediately)."""
+        self.state.drain_device(idx)
+        self.metrics.device_drains += 1
+
+    def rejoin_device(self, idx: int, now: float) -> None:
+        """Bring a drained or failed device back into the placement pool."""
+        self.state.rejoin_device(idx)
+        self.metrics.device_rejoins += 1
+
     def _allocate_lp_task(
         self, task: Task, tp: float, deadline: float,
         ctx: Optional[dict] = None,
@@ -992,7 +1066,7 @@ class PreemptionAwareScheduler:
 
         source = task.source_device
         sdev = self.state.devices[source]
-        if sdev.fits(arrival, arrival + proc, cores):
+        if _dev_up(sdev) and sdev.fits(arrival, arrival + proc, cores):
             dev, offloaded, xfer_t1, xfer_dur, t1 = sdev, False, 0.0, 0.0, arrival
         elif not self.allow_offload:
             return None
@@ -1014,7 +1088,8 @@ class PreemptionAwareScheduler:
                         plane.fits_mask(t1, t1 + proc, cores))
                 else:
                     sub["feasible"] = [d.device for d in self.state.devices
-                                       if d.fits(t1, t1 + proc, cores)]
+                                       if _dev_up(d)
+                                       and d.fits(t1, t1 + proc, cores)]
             # even spreading: least load over the deadline window; argmin
             # over the stacked load vector returns the FIRST minimum, i.e.
             # ties break toward the lowest device index — exactly the old

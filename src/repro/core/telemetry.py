@@ -299,13 +299,23 @@ class StreamTelemetry:
         self.admitted_hp = 0
         self.admitted_lp = 0
         self.windows = 0
+        # Churn plane (DESIGN.md §16): recovery latency of re-placed
+        # orphans — virtual seconds from the device-loss instant to the
+        # replacement slot's start (how long the orphaned work stalls).
+        # Fixed-size like every other sketch; empty without churn.
+        self.recovery_delay = LogHistogram(lo=1e-4, hi=1e5)
+        self.devices_failed = 0
+        self.devices_drained = 0
+        self.devices_rejoined = 0
+        self.orphans_seen = 0
+        self.orphans_recovered = 0
 
     @property
     def shed_total(self) -> int:
         return self.shed_queue_full + self.shed_expired
 
     def snapshot(self) -> dict[str, Any]:
-        return {
+        out = {
             "offered": self.offered,
             "admitted_hp": self.admitted_hp,
             "admitted_lp": self.admitted_lp,
@@ -320,3 +330,16 @@ class StreamTelemetry:
             "queue_depth": self.queue_depth.snapshot(),
             "slo": self.slo.snapshot(),
         }
+        if self.devices_failed or self.devices_drained or self.devices_rejoined:
+            # Present only under churn: churn-free snapshots keep their
+            # historic key set (byte-compared by the zero-churn
+            # differential in tests/test_accounting_invariants.py).
+            out["churn"] = {
+                "devices_failed": self.devices_failed,
+                "devices_drained": self.devices_drained,
+                "devices_rejoined": self.devices_rejoined,
+                "orphans_seen": self.orphans_seen,
+                "orphans_recovered": self.orphans_recovered,
+                "recovery_delay_s": self.recovery_delay.snapshot(),
+            }
+        return out

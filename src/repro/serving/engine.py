@@ -141,6 +141,19 @@ class _ServingClient(DispatchClient):
         req.state = "failed"
         eng.done.append(req)
 
+    def on_device_lost(self, task: Task) -> None:
+        # The slice holding this request's decode state died: unlike a
+        # preemption under lose_work=False, the resident KV cache is gone
+        # with the hardware, so a recovered orphan always restarts.
+        eng = self.eng
+        req = eng._by_task.get(task)
+        if req is None:
+            return
+        req.n_preemptions += 1
+        req.state = "preempted"
+        eng._decode_state.pop(req.rid, None)
+        req.tokens_out = []
+
 
 class PreemptiveServingEngine:
     """Priority/deadline/preemption-aware engine over N slices."""
@@ -294,6 +307,20 @@ class PreemptiveServingEngine:
         req.completed_at = self.q.now
         self._decode_state.pop(req.rid, None)
         self.done.append(req)
+
+    # ------------------------------------------------------------------ #
+    # Slice churn (DESIGN.md §16)                                        #
+    # ------------------------------------------------------------------ #
+    def fail_slice(self, idx: int):
+        """A pod slice died mid-run: its in-flight requests orphan, lose
+        their resident decode state, and recover elsewhere (or fail)."""
+        return self.dispatcher.device_lost(idx)
+
+    def drain_slice(self, idx: int) -> None:
+        self.dispatcher.device_drained(idx)
+
+    def rejoin_slice(self, idx: int) -> None:
+        self.dispatcher.device_rejoined(idx)
 
     # ------------------------------------------------------------------ #
     def run(self, until: Optional[float] = None) -> Metrics:

@@ -340,6 +340,11 @@ class _StreamClient(DispatchClient):
     def on_late(self, task: Task) -> None:
         self.engine._task_terminal(task, ok=False)
 
+    def on_device_lost(self, task: Task) -> None:
+        # The orphan is transient, not terminal: recovery (or failure)
+        # settles through the normal completion / admit-fail hooks.
+        self.engine.telemetry.orphans_seen += 1
+
 
 # ====================================================================== #
 # The streaming engine                                                   #
@@ -405,6 +410,9 @@ class StreamingEngine:
         self.dispatcher = PolicyDispatcher(
             self.policy, self.q, self.net, self.metrics,
             client=_StreamClient(self), exact_slots=True)
+        # device calendars (churn drivers and tests read lifecycle off this;
+        # None for policies without a NetworkState)
+        self.state = getattr(self.policy, "state", None)
         self.queue = AdmissionQueue(queue_capacity, soft_watermark)
         self.shed_policy = create_shed_policy(shed)
         self.telemetry = telemetry if telemetry is not None \
@@ -601,6 +609,62 @@ class StreamingEngine:
         self.done.append(req)
 
     # ------------------------------------------------------------------ #
+    # Device churn (DESIGN.md §16)                                       #
+    # ------------------------------------------------------------------ #
+    def fail_device(self, idx: int, now: Optional[float] = None):
+        """Hard-fail a device at ``now``: orphan its in-flight work and
+        drive recovery through the dispatcher (LP orphans re-placed or
+        FAILED, HP orphans re-admitted ahead of the next window)."""
+        t = self._advance(now)
+        dec = self.dispatcher.device_lost(idx)
+        tel = self.telemetry
+        tel.devices_failed += 1
+        tel.orphans_recovered += len(dec.reallocations)
+        for alloc in dec.reallocations:
+            tel.recovery_delay.record(max(alloc.t_start - t, 0.0))
+        for task in dec.preempted:
+            if task.priority == Priority.HIGH \
+                    and task.state is not TaskState.FAILED:
+                tel.orphans_recovered += 1
+        return dec
+
+    def drain_device(self, idx: int, now: Optional[float] = None) -> None:
+        """Stop admitting onto a device; its in-flight work runs out."""
+        self._advance(now)
+        self.dispatcher.device_drained(idx)
+        self.telemetry.devices_drained += 1
+
+    def rejoin_device(self, idx: int, now: Optional[float] = None) -> None:
+        """Bring a DOWN/DRAINING device back with a cleared calendar."""
+        self._advance(now)
+        self.dispatcher.device_rejoined(idx)
+        self.telemetry.devices_rejoined += 1
+
+    def _advance(self, now: Optional[float]) -> float:
+        if now is not None and now > self.q.now:
+            self.q.run(until=now)
+            self.q.now = max(self.q.now, now)
+        return self.q.now
+
+    def _apply_churn_event(self, ev) -> None:
+        """Apply one :class:`~repro.sim.churn.ChurnEvent` at its timestamp."""
+        if ev.kind == "fail":
+            self.fail_device(ev.device, now=ev.t)
+        elif ev.kind == "drain":
+            self.drain_device(ev.device, now=ev.t)
+        elif ev.kind == "rejoin":
+            self.rejoin_device(ev.device, now=ev.t)
+        elif ev.kind == "link":
+            # Time-varying link degradation: occupy the shared link for the
+            # event's duration so concurrent offloads queue behind it.
+            t = self._advance(ev.t)
+            state = self.state
+            if state is not None and ev.duration > 0.0:
+                state.link.reserve(t, t + ev.duration, ("churn", ev.device))
+        else:
+            raise ValueError(f"unknown churn event kind {ev.kind!r}")
+
+    # ------------------------------------------------------------------ #
     # The pump                                                           #
     # ------------------------------------------------------------------ #
     def run(
@@ -610,15 +674,21 @@ class StreamingEngine:
         max_requests: Optional[int] = None,
         until: Optional[float] = None,
         on_window: Optional[Callable[["StreamingEngine"], None]] = None,
+        churn: Optional[Iterable] = None,
     ) -> dict[str, Any]:
         """Pump a source of :class:`StreamArrival` / :class:`StreamRequest`
         through windowed admission until the source (or ``max_requests`` /
         ``until``) is exhausted and all admitted work has settled.
 
         ``on_window`` runs after every window flush (soak's RSS sampler).
+        ``churn`` is an optional time-sorted stream of
+        :class:`~repro.sim.churn.ChurnEvent` records applied at their
+        timestamps as windows advance (``None`` — the default — executes
+        zero churn code, so churn-free runs stay bit-identical).
         """
         it = iter(source)
         offered = 0
+        churn_events = deque(churn) if churn is not None else None
 
         def pull():
             nonlocal offered
@@ -645,11 +715,22 @@ class StreamingEngine:
             while nxt is not None and nxt.arrival <= w_end:
                 self.offer(nxt, now=nxt.arrival)
                 nxt = pull()
+            if churn_events:
+                # lifecycle events land at their exact timestamps: _advance
+                # drains the event queue up to ev.t first, so completions
+                # scheduled before the failure still fire before it
+                while churn_events and churn_events[0].t <= w_end:
+                    self._apply_churn_event(churn_events.popleft())
             self.q.run(until=w_end)
             self.q.now = max(self.q.now, w_end)
             self.flush_window(w_end)
             if on_window is not None:
                 on_window(self)
+        if churn_events:
+            # events past the last arrival window still interleave with the
+            # tail of admitted work draining below
+            while churn_events:
+                self._apply_churn_event(churn_events.popleft())
         self.q.run()
         self.dispatcher.finalize()
         if self._by_task:

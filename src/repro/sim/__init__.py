@@ -4,6 +4,8 @@ from .traces import TraceConfig, generate_trace, generate_type_trace, \
 from .experiment import MIXED_SCENARIOS, ScenarioConfig, run_scenario, \
     SCENARIOS
 from .openended import FirehoseConfig, firehose
+from .churn import ChurnConfig, ChurnEvent, ChurnInjector, churn_schedule
+from .chaos import CHAOS_SCENARIOS, ChaosConfig, chaos_gate, run_chaos
 from .scenarios import (
     LargeNConfig,
     generate_arrivals,
@@ -25,6 +27,14 @@ __all__ = [
     "SCENARIOS",
     "FirehoseConfig",
     "firehose",
+    "ChurnConfig",
+    "ChurnEvent",
+    "ChurnInjector",
+    "churn_schedule",
+    "CHAOS_SCENARIOS",
+    "ChaosConfig",
+    "chaos_gate",
+    "run_chaos",
     "LargeNConfig",
     "generate_arrivals",
     "run_large_n",

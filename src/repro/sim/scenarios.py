@@ -42,7 +42,7 @@ from __future__ import annotations
 import heapq
 import time as _time
 from dataclasses import dataclass, replace
-from typing import Optional, Sequence
+from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
@@ -205,6 +205,7 @@ def run_large_n(
     preemption: bool = True,
     preemption_plane: bool = True,
     state: Optional[object] = None,
+    churn: Optional[Iterable] = None,
 ) -> dict:
     """Drive the scheduler over the scenario's arrival stream, end to end.
 
@@ -215,6 +216,10 @@ def run_large_n(
     new calendars run the *same* workload; ``preemption_plane=False`` forces
     the scalar eviction loop (the preemption plane's differential
     reference — ``bench_preemption`` runs both over identical storms).
+    ``churn`` is an optional time-sorted stream of
+    :class:`~repro.sim.churn.ChurnEvent` records merged into the
+    controller event heap (``None`` executes zero churn code, keeping
+    churn-free runs bit-identical).
 
     Returns a summary dict with admission counts and wall-clock admission
     latency statistics (microseconds per call).
@@ -243,12 +248,16 @@ def run_large_n(
     # `now`): HP admission at arrival time; the LP request materialises
     # ``lp_delay`` later (stage-2 latency); in batching mode a flush event
     # closes ``batch_window`` after the first buffered request.
-    HP, LP, FLUSH = 0, 1, 2
+    HP, LP, FLUSH, CHURN = 0, 1, 2, 3
     seq = 0
     heap: list[tuple[float, int, int, object]] = []
     for a in arrivals:
         heap.append((a.t, seq, HP, a))
         seq += 1
+    if churn is not None:
+        for ev in churn:
+            heap.append((ev.t, seq, CHURN, ev))
+            seq += 1
     heapq.heapify(heap)
     flush_pending = False
 
@@ -288,15 +297,26 @@ def run_large_n(
                     seq += 1
             else:
                 tally_lp([sched.allocate_low_priority(req, now)])
-        else:                                      # FLUSH
+        elif kind == FLUSH:
             flush_pending = False
             if buffer:
                 tally_lp(sched.allocate_low_priority_batch(buffer, now))
                 buffer = []
+        else:                                      # CHURN (DESIGN.md §16)
+            ev = payload
+            if ev.kind == "fail":
+                orphans, _ = sched.fail_device(ev.device, now)
+                sched.settle_hp_orphans(orphans, now)
+            elif ev.kind == "drain":
+                sched.drain_device(ev.device, now)
+            elif ev.kind == "rejoin":
+                sched.rejoin_device(ev.device, now)
+            elif ev.kind == "link" and ev.duration > 0.0:
+                st.link.reserve(now, now + ev.duration, ("churn", ev.device))
     wall = _time.perf_counter() - t_wall
 
     hp_lat = metrics.t_hp_initial + metrics.t_hp_preempt
-    return {
+    out = {
         "scenario": cfg.name,
         "arrival": cfg.arrival,
         "n_devices": cfg.n_devices,
@@ -318,6 +338,15 @@ def run_large_n(
         "lp_alloc_us_p99": _us_pct(metrics.t_lp_alloc, 99),
         "wall_s": wall,
     }
+    if metrics.device_failures or metrics.device_drains \
+            or metrics.device_rejoins:
+        # churn runs only: churn-free summaries keep their historic key set
+        out["device_failures"] = metrics.device_failures
+        out["device_drains"] = metrics.device_drains
+        out["device_rejoins"] = metrics.device_rejoins
+        out["orphans_created"] = metrics.orphans_created
+        out["orphans_recovered"] = metrics.orphans_recovered
+    return out
 
 
 def _us_mean(xs: list[float]) -> float:

@@ -141,3 +141,124 @@ def test_streaming_partition_includes_shed_bucket(shed, policy):
     tel = eng.telemetry
     assert tel.shed_total == tel.shed_queue_full + tel.shed_expired
     assert tel.offered == m.hp_generated + m.lp_requests_total
+
+
+# --------------------------------------------------------------------- #
+# Churn (DESIGN.md §16): orphans are absorbed, never a sixth bucket     #
+# --------------------------------------------------------------------- #
+def _run_with_churn(base: ScenarioConfig, policy: str) -> Runtime:
+    """Run a scenario with device-lifecycle events pre-scheduled on the
+    runtime's event queue: a hard failure mid-run, a drain, and a rejoin
+    — driven through the same ``PolicyDispatcher.device_lost`` path the
+    streaming engine uses, for EVERY registered policy (policies without
+    calendars inherit the protocol's no-op lifecycle hooks)."""
+    rt = Runtime(replace(base, name=f"{base.name}_{policy}_churn",
+                         algorithm=policy))
+    period = rt.net.frame_period
+    n = base.n_frames
+    rt.q.push(0.35 * n * period, lambda: rt.dispatcher.device_lost(1))
+    rt.q.push(0.45 * n * period, lambda: rt.dispatcher.device_drained(2))
+    rt.q.push(0.60 * n * period, lambda: rt.dispatcher.device_rejoined(1))
+    rt.q.push(0.70 * n * period, lambda: rt.dispatcher.device_rejoined(2))
+    rt.q.push(0.80 * n * period, lambda: rt.dispatcher.device_lost(0))
+    rt.run()
+    return rt
+
+
+@pytest.mark.parametrize("policy", registered_policies())
+@pytest.mark.parametrize("base", ["uniform_p", "weighted4_p"])
+def test_churn_keeps_every_task_terminal(base, policy):
+    rt = _run_with_churn(BASES[base], policy)
+    hp_tasks = [f.hp_task for f in rt.frames if f.hp_task is not None]
+    lp_tasks = [t for req in rt.requests for t in req.tasks]
+    bad = [t for t in hp_tasks + lp_tasks if t.state not in TERMINAL]
+    assert not bad, (
+        f"{len(bad)} task(s) stranded non-terminal under churn, e.g. "
+        f"{bad[0].task_id} in state {bad[0].state} "
+        f"(priority={bad[0].priority})")
+
+
+@pytest.mark.parametrize("policy", registered_policies())
+@pytest.mark.parametrize("base", ["uniform_p", "weighted4_p"])
+def test_churn_partition_has_no_orphan_bucket(base, policy):
+    """Orphans land in the EXISTING buckets (recovered -> realloc_success
+    then completed/failed at runtime; unrecoverable LP -> realloc_failure;
+    non-re-admittable HP -> hp_failed_alloc): the partition equalities
+    hold unchanged — orphans are not a sixth terminal bucket."""
+    rt = _run_with_churn(BASES[base], policy)
+    m = rt.metrics
+    assert m.hp_generated == (
+        m.hp_completed + m.hp_failed_alloc + m.hp_failed_runtime
+    ), "HP counters do not partition the generated HP tasks under churn"
+    assert m.lp_generated == (
+        m.lp_completed + m.lp_failed_alloc + m.lp_failed_runtime
+        + m.realloc_failure
+    ), "LP counters do not partition the generated LP tasks under churn"
+    if m.orphans_created:
+        assert m.device_failures >= 1
+        assert "orphans_created" in m.summary()
+
+
+def test_settle_helper_registry_matches_the_audited_list():
+    """The replint terminal-state registry and this suite co-evolve: a
+    new settle helper must be certified here (its terminal transitions
+    covered by the partition sweeps above) in the same change that
+    registers it.  This pin makes forgetting one half a test failure."""
+    from repro.analysis.rules.terminal_state import SETTLE_HELPERS
+    audited = {
+        "repro/core/policy.py": {
+            "PolicyDispatcher.submit_hp",
+            "PolicyDispatcher._account_lp",
+            "PolicyDispatcher._violate",
+            "PolicyDispatcher.task_finished",
+            "CalendarPolicy.fail_device",         # orphan settle (PR 9)
+            "EDFOnlyPolicy.decide_lp_batch",
+            "EDFOnlyPolicy.reallocate",
+        },
+        "repro/core/scheduler.py": {
+            "PreemptionAwareScheduler._reallocate_victims",
+            "PreemptionAwareScheduler.allocate_low_priority",
+            "PreemptionAwareScheduler.allocate_low_priority_batch",
+            "PreemptionAwareScheduler.reallocate",
+            "PreemptionAwareScheduler.settle_hp_orphans",  # orphan settle
+        },
+        "repro/core/workstealer.py": {
+            "WorkstealingPolicy._kill_if_late",
+            "WorkstealingPolicy._kick",
+            "WorkstealingPolicy.finalize",
+        },
+    }
+    assert {k: set(v) for k, v in SETTLE_HELPERS.items()} == audited
+
+
+# --------------------------------------------------------------------- #
+# Zero-churn differential: disabled churn is bit-identical to none      #
+# --------------------------------------------------------------------- #
+def test_disabled_churn_injector_runs_bit_identical_to_no_churn():
+    """A ChurnConfig with every rate at zero yields an empty schedule
+    (consuming zero randomness), and feeding that empty stream through
+    ``run(churn=...)`` produces the byte-identical report of a run that
+    never heard of churn — the goldens (regen_golden --check) therefore
+    cover the churn-capable engine without regeneration."""
+    from repro.sim.churn import ChurnConfig, ChurnInjector
+
+    inj = ChurnInjector(ChurnConfig(n_devices=4))
+    assert len(inj) == 0
+
+    def go(churn):
+        reset_id_counters()
+        eng = StreamingEngine(4, queue_capacity=64, window=0.5)
+        cfg = FirehoseConfig(n_devices=4, rate=10.0, seed=21)
+        report = eng.run(firehose(cfg, limit=200), churn=churn)
+        # wall-clock latency sketches are real time, not virtual
+        report["metrics"] = {k: v for k, v in report["metrics"].items()
+                             if not k.startswith("t_")}
+        tel = report["telemetry"]
+        for key in ("admission_latency_s",):
+            tel.pop(key, None)
+        return report
+
+    base, wired = go(None), go(iter(inj))
+    assert base == wired
+    assert "churn" not in base["telemetry"], \
+        "zero-churn snapshots must keep their historic key set"

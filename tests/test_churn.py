@@ -1,0 +1,443 @@
+"""Churn-tolerant network plane (DESIGN.md §16): lifecycle transitions,
+the masked probe plane, orphan recovery, the seeded injector, the chaos
+harness and lifecycle checkpointing.
+
+The load-bearing invariants:
+
+* every orphan terminates — ALLOCATED elsewhere before its deadline or
+  FAILED, never stranded in a transient state;
+* admission never places onto a DOWN or DRAINING device (scalar path,
+  vectorized probe plane, and HP's source-local gate all agree);
+* churn-free runs execute zero churn code (bit-identity pinned in
+  tests/test_accounting_invariants.py's differential);
+* the lifecycle plane round-trips through the checkpoint store, so a
+  restore mid-drain resumes recovery instead of forgetting orphans.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import lifecycle as ck_lifecycle
+from repro.checkpoint import store as ck_store
+from repro.core.calendar import DeviceLifecycle, NetworkState
+from repro.core.metrics import Metrics
+from repro.core.network import NetworkConfig
+from repro.core.scheduler import PreemptionAwareScheduler
+from repro.core.task import (
+    LowPriorityRequest,
+    Priority,
+    Task,
+    TaskState,
+    reset_id_counters,
+)
+from repro.serving.stream import StreamingEngine
+from repro.sim.chaos import CHAOS_SCENARIOS, chaos_gate, run_chaos
+from repro.sim.churn import ChurnConfig, ChurnInjector, churn_schedule
+from repro.sim.scenarios import LargeNConfig, run_large_n
+
+
+def make(preemption=True, n_devices=4):
+    reset_id_counters()
+    state = NetworkState(n_devices)
+    net = NetworkConfig()
+    metrics = Metrics("churn_test")
+    sched = PreemptionAwareScheduler(state, net, preemption=preemption,
+                                     metrics=metrics)
+    return state, net, sched, metrics
+
+
+def hp_task(dev=0, deadline=2.0, frame=0):
+    return Task(priority=Priority.HIGH, source_device=dev,
+                deadline=deadline, frame_id=frame)
+
+
+def lp_request(dev=0, deadline=30.0, n=1, frame=0):
+    req = LowPriorityRequest(source_device=dev, deadline=deadline,
+                             frame_id=frame, n_tasks=n)
+    req.make_tasks()
+    return req
+
+
+# --------------------------------------------------------------------- #
+# Lifecycle state machine                                               #
+# --------------------------------------------------------------------- #
+def test_devices_start_up_and_transitions_mark_the_plane():
+    st = NetworkState(3)
+    assert all(d.lifecycle is DeviceLifecycle.UP for d in st.devices)
+    assert st.alive_mask().tolist() == [True, True, True]
+    st.drain_device(1)
+    assert st.devices[1].lifecycle is DeviceLifecycle.DRAINING
+    assert st.alive_mask().tolist() == [True, False, True]
+    st.fail_device(2, now=0.0)
+    assert st.lifecycle_codes().tolist() == [0, 1, 2]
+    st.rejoin_device(1)
+    st.rejoin_device(2)
+    assert st.alive_mask().all()
+
+
+def test_drain_of_a_down_device_is_an_error():
+    st = NetworkState(2)
+    st.fail_device(0, now=0.0)
+    with pytest.raises(ValueError, match="DOWN"):
+        st.drain_device(0)
+    st.rejoin_device(0)
+    st.drain_device(0)          # legal again after rejoin
+
+
+def test_fail_device_orphans_in_flight_and_clears_the_calendar():
+    st = NetworkState(2)
+    req = lp_request(dev=0, n=2)
+    t0, t1 = req.tasks
+    st.devices[0].reserve(0.0, 5.0, 2, t0)
+    st.devices[0].reserve(1.0, 6.0, 2, t1)
+    done = lp_request(dev=0, frame=1).tasks[0]
+    st.devices[0].reserve(0.0, 1.0, 2, done)     # finishes before the fail
+    orphans = st.fail_device(0, now=2.0)
+    # gc retires the finished reservation first; orphans sorted by task id
+    assert orphans == sorted([t0, t1], key=lambda t: t.task_id)
+    assert not list(st.devices[0].reservations())
+    assert st.devices[0].lifecycle is DeviceLifecycle.DOWN
+
+
+def test_rejoin_after_fail_restores_a_cleared_admissible_calendar():
+    st = NetworkState(2)
+    st.devices[1].reserve(0.0, 50.0, 4, lp_request(dev=1).tasks[0])
+    st.fail_device(1, now=0.0)
+    st.rejoin_device(1)
+    dev = st.devices[1]
+    assert dev.lifecycle is DeviceLifecycle.UP
+    assert not list(dev.reservations())
+    assert dev.fits(0.0, 10.0, 4)
+
+
+# --------------------------------------------------------------------- #
+# Masked probe plane                                                    #
+# --------------------------------------------------------------------- #
+def test_probe_plane_masks_down_and_draining_devices():
+    st = NetworkState(3)
+    st.drain_device(1)
+    st.fail_device(2, now=0.0)
+    plane = st.probe_plane()
+    assert plane.alive.tolist() == [True, False, False]
+    assert plane.fits_mask(0.0, 5.0, 1).tolist() == [True, False, False]
+    starts = plane.earliest_fit(1.0, 0.0, 1)
+    assert starts[0] == 0.0
+    assert math.isinf(starts[1]) and math.isinf(starts[2])
+
+
+def test_probe_plane_unmasks_on_rejoin_via_dirty_mark():
+    st = NetworkState(2)
+    plane = st.probe_plane()
+    assert plane.fits_mask(0.0, 1.0, 1).all()
+    st.fail_device(0, now=0.0)
+    plane = st.probe_plane()
+    assert plane.fits_mask(0.0, 1.0, 1).tolist() == [False, True]
+    st.rejoin_device(0)
+    plane = st.probe_plane()
+    assert plane.fits_mask(0.0, 1.0, 1).tolist() == [True, True]
+
+
+def test_probe_window_carries_the_alive_mask():
+    st = NetworkState(3)
+    st.fail_device(1, now=0.0)
+    win = st.probe_plane(0.0, 4.0)
+    assert win.fits(1).tolist() == [True, False, True]
+
+
+# --------------------------------------------------------------------- #
+# Scheduler-level orphan recovery                                       #
+# --------------------------------------------------------------------- #
+def test_lp_orphans_reallocate_elsewhere_or_fail_never_strand():
+    st, net, sched, m = make(n_devices=3)
+    req = lp_request(dev=1, deadline=300.0, n=2)
+    res = sched.allocate_low_priority(req, 0.0)
+    assert len(res.allocations) == 2
+    host_devs = {t.device for t in req.tasks}
+    victim_dev = req.tasks[0].device
+    orphans, reallocs = sched.fail_device(victim_dev, 0.5)
+    moved = [t for t in req.tasks if t.device == victim_dev] or []
+    for task in orphans:
+        assert task.state in (TaskState.ALLOCATED, TaskState.FAILED), \
+            f"orphan {task.task_id} stranded in {task.state}"
+        if task.state is TaskState.ALLOCATED:
+            assert task.device != victim_dev
+            assert task.t_end <= task.deadline + 1e-9
+    assert m.device_failures == 1
+    assert m.orphans_created == len(orphans)
+    assert m.orphans_recovered == len(reallocs)
+    # the partition absorbs the orphans: no new terminal bucket
+    assert m.realloc_failure == sum(
+        1 for t in orphans if t.state is TaskState.FAILED)
+
+
+def test_orphan_link_slots_are_cancelled_like_preemption_cleanup():
+    st, net, sched, m = make(n_devices=2)
+    # saturate the source so the request offloads over the link to dev 1
+    blocker = lp_request(dev=0, deadline=200.0)
+    st.devices[0].reserve(0.0, 100.0, 4, blocker.tasks[0])
+    req = lp_request(dev=0, deadline=60.0, frame=1)
+    res = sched.allocate_low_priority(req, 0.0)
+    [alloc] = res.allocations
+    assert alloc.offloaded and alloc.device == 1
+    victim = req.tasks[0]
+    tags = [s.tag for s in st.link.reservations()]
+    assert ("xfer", victim.task_id) in tags
+    assert ("update", victim.task_id) in tags
+
+    orphans, reallocs = sched.fail_device(1, 0.0)
+    assert victim in orphans
+    tags = [s.tag for s in st.link.reservations()]
+    assert ("xfer", victim.task_id) not in tags
+    assert ("update", victim.task_id) not in tags
+    # source saturated and host dead: recovery is impossible -> FAILED
+    assert victim.state is TaskState.FAILED
+    assert m.realloc_failure == 1
+
+
+def test_hp_orphans_settle_failed_when_their_source_is_down():
+    st, net, sched, m = make(n_devices=2)
+    hp = hp_task(dev=0, deadline=5.0)
+    m.hp_generated += 1
+    assert sched.allocate_high_priority(hp, 0.0).success
+    orphans, _ = sched.fail_device(0, 0.1)
+    assert hp in orphans
+    sched.settle_hp_orphans(orphans, 0.1)
+    # HP is source-local (paper rule): a dead source cannot host it again
+    assert hp.state is TaskState.FAILED
+    assert m.hp_failed_alloc == 1
+    assert m.hp_generated == m.hp_completed + m.hp_failed_alloc \
+        + m.hp_failed_runtime
+
+
+def test_admission_rejects_down_and_draining_sources():
+    st, net, sched, m = make(n_devices=2)
+    st.drain_device(0)
+    assert not sched.allocate_high_priority(hp_task(dev=0), 0.0).success
+    st.rejoin_device(0)
+    assert sched.allocate_high_priority(hp_task(dev=0, frame=1), 0.0).success
+    st.fail_device(1, now=0.0)
+    assert not sched.allocate_high_priority(
+        hp_task(dev=1, frame=2), 0.0).success
+
+
+def test_lp_placement_avoids_non_up_devices():
+    st, net, sched, m = make(n_devices=3)
+    st.fail_device(2, now=0.0)
+    st.drain_device(1)
+    res = sched.allocate_low_priority(lp_request(dev=1, deadline=300.0), 0.0)
+    # source is DRAINING, dev 2 is DOWN: only dev 0 may host
+    for alloc in res.allocations:
+        assert alloc.device == 0
+
+
+# --------------------------------------------------------------------- #
+# Seeded churn injector                                                 #
+# --------------------------------------------------------------------- #
+def test_disabled_injector_is_a_strict_noop():
+    cfg = ChurnConfig(n_devices=16)          # all rates default to 0
+    assert not cfg.enabled
+    assert churn_schedule(cfg) == []
+    inj = ChurnInjector(cfg)
+    assert not inj.enabled and len(inj) == 0
+    assert inj.counts() == {"fail": 0, "drain": 0, "rejoin": 0, "link": 0}
+
+
+def test_injector_is_seed_deterministic():
+    cfg = ChurnConfig(n_devices=32, fail_rate=2.0, drain_rate=1.0,
+                      link_rate=0.5, duration=10.0, seed=7)
+    a, b = churn_schedule(cfg), churn_schedule(cfg)
+    assert a == b and len(a) > 0
+    c = churn_schedule(ChurnConfig(
+        n_devices=32, fail_rate=2.0, drain_rate=1.0, link_rate=0.5,
+        duration=10.0, seed=8))
+    assert a != c
+
+
+def test_injector_events_are_time_sorted_and_well_formed():
+    cfg = ChurnConfig(n_devices=16, fail_rate=3.0, drain_rate=1.0,
+                      link_rate=1.0, duration=8.0, seed=3)
+    events = churn_schedule(cfg)
+    assert all(e1.t <= e2.t for e1, e2 in zip(events, events[1:]))
+    down = set()
+    for ev in events:
+        if ev.kind in ("fail", "drain"):
+            assert 0 <= ev.device < cfg.n_devices
+            assert ev.device not in down, \
+                "churn must never target an already-lost device"
+            down.add(ev.device)
+        elif ev.kind == "rejoin":
+            assert ev.device in down
+            down.remove(ev.device)
+        else:
+            assert ev.kind == "link" and ev.duration > 0.0
+
+
+def test_injector_respects_the_down_cap():
+    cfg = ChurnConfig(n_devices=10, fail_rate=100.0, duration=5.0,
+                      rejoin=False, max_down_frac=0.3, seed=1)
+    inj = ChurnInjector(cfg)
+    assert inj.counts()["fail"] == 3          # max(1, int(10 * 0.3))
+
+
+def test_injector_rejoins_every_lost_device():
+    cfg = ChurnConfig(n_devices=16, fail_rate=2.0, drain_rate=1.0,
+                      duration=6.0, rejoin=True, rejoin_delay=1.5, seed=5)
+    counts = ChurnInjector(cfg).counts()
+    assert counts["rejoin"] == counts["fail"] + counts["drain"] > 0
+
+
+# --------------------------------------------------------------------- #
+# Streaming engine churn API + chaos harness                            #
+# --------------------------------------------------------------------- #
+def test_streaming_engine_fail_device_recovers_and_resolves_all():
+    reset_id_counters()
+    eng = StreamingEngine(3, window=0.25)
+    for d in range(3):
+        eng.offer(_lp_stream(eng, device=d))
+    eng.flush_window(0.0)
+    assert eng.metrics.lp_allocated > 0
+    eng.fail_device(0, now=0.05)
+    assert eng.telemetry.devices_failed == 1
+    report = eng.run([])                      # drain everything admitted
+    assert report["unresolved"] == 0
+    m = eng.metrics
+    assert m.lp_generated == (m.lp_completed + m.lp_failed_alloc
+                              + m.lp_failed_runtime + m.realloc_failure)
+    assert "churn" in report["telemetry"]
+
+
+def _lp_stream(eng, device=0, deadline=200.0, n_tasks=2):
+    from repro.serving.stream import StreamRequest
+    return StreamRequest(priority=Priority.LOW, deadline=deadline,
+                         home_device=device, n_tasks=n_tasks)
+
+
+def test_streaming_drain_then_rejoin_round_trip():
+    eng = StreamingEngine(2, window=0.25)
+    eng.drain_device(1)
+    assert eng.state.devices[1].lifecycle is DeviceLifecycle.DRAINING
+    eng.rejoin_device(1)
+    assert eng.state.devices[1].lifecycle is DeviceLifecycle.UP
+    tel = eng.telemetry
+    assert tel.devices_drained == 1 and tel.devices_rejoined == 1
+
+
+def test_chaos_smoke_scenario_passes_its_gate():
+    cfg = CHAOS_SCENARIOS["smoke"]
+    result = run_chaos(cfg)
+    assert result["unresolved"] == 0
+    assert result["devices_failed"] > 0
+    assert result["orphans_created"] > 0
+    assert chaos_gate(result, cfg) == []
+
+
+def test_chaos_is_seed_deterministic():
+    cfg = CHAOS_SCENARIOS["smoke"]
+    a, b = run_chaos(cfg), run_chaos(cfg)
+
+    def virtual(rep):
+        # wall-clock latency sketches (t_*_ms) are real time, not virtual
+        return {k: v for k, v in rep["metrics"].items()
+                if not k.startswith("t_")}
+
+    assert virtual(a["report"]) == virtual(b["report"])
+    assert a["churn_events"] == b["churn_events"]
+    assert a["recovery_ratio"] == b["recovery_ratio"]
+
+
+# --------------------------------------------------------------------- #
+# run_large_n churn wiring                                              #
+# --------------------------------------------------------------------- #
+def test_run_large_n_applies_churn_and_reports_counters():
+    cfg = LargeNConfig("churn_large", n_devices=8, duration=30.0,
+                       hp_rate=0.2, seed=11)
+    inj = ChurnInjector(ChurnConfig(
+        name="churn_large", n_devices=8, fail_rate=0.2, drain_rate=0.1,
+        duration=20.0, start=5.0, rejoin_delay=2.0, seed=11))
+    assert inj.enabled
+    out = run_large_n(cfg, churn=inj)
+    assert out["device_failures"] >= 1
+    assert out["orphans_created"] >= out["orphans_recovered"] >= 0
+    base = run_large_n(cfg)
+    assert "device_failures" not in base, \
+        "churn-free summaries must keep their historic key set"
+
+
+# --------------------------------------------------------------------- #
+# Lifecycle checkpointing                                               #
+# --------------------------------------------------------------------- #
+def test_lifecycle_checkpoint_roundtrip_mid_drain(tmp_path):
+    st = NetworkState(4)
+    st.drain_device(1)
+    orphans = []
+    req = lp_request(dev=2, n=2)
+    st.devices[2].reserve(0.0, 9.0, 2, req.tasks[0])
+    orphans = [t.task_id for t in st.fail_device(2, now=1.0)]
+    path = str(tmp_path / "ckpt")
+    ck_lifecycle.save_lifecycle(path, st, pending_orphans=orphans,
+                                metadata={"virtual_now": 1.0})
+    meta = ck_store.load_metadata(path)
+    assert meta["kind"] == "device_lifecycle"
+    assert meta["n_devices"] == 4 and meta["n_orphans"] == len(orphans)
+
+    # restore into a fresh fleet that has picked up unrelated state
+    st2 = NetworkState(4)
+    st2.devices[2].reserve(0.0, 5.0, 4, lp_request(dev=2, frame=9).tasks[0])
+    pending = ck_lifecycle.restore_lifecycle(path, st2)
+    assert pending == sorted(orphans)
+    assert st2.devices[1].lifecycle is DeviceLifecycle.DRAINING
+    assert st2.devices[2].lifecycle is DeviceLifecycle.DOWN
+    # a DOWN restore clears the calendar (those reservations died with
+    # the device in the checkpointed world)
+    assert not list(st2.devices[2].reservations())
+    plane = st2.probe_plane()
+    assert plane.alive.tolist() == [True, False, False, True]
+
+
+def test_lifecycle_restore_validates_fleet_size_and_kind(tmp_path):
+    st = NetworkState(3)
+    path = str(tmp_path / "ckpt")
+    ck_lifecycle.save_lifecycle(path, st)
+    with pytest.raises(ValueError, match="3 devices"):
+        ck_lifecycle.restore_lifecycle(path, NetworkState(5))
+    other = str(tmp_path / "other")
+    ck_store.save(other, {"x": np.zeros(3)}, metadata={"kind": "weights"})
+    with pytest.raises(ValueError, match="not a device-lifecycle"):
+        ck_lifecycle.restore_lifecycle(other, st)
+
+
+def test_lifecycle_restore_rejects_tampered_payloads(tmp_path):
+    st = NetworkState(3)
+    st.fail_device(0, now=0.0)
+    tree = ck_lifecycle.lifecycle_tree(st)
+    # mask/codes disagreement (edited payload) must refuse
+    bad = dict(tree, alive_mask=np.array([True, True, True]))
+    path = str(tmp_path / "bad")
+    ck_store.save(path, bad, metadata={
+        "kind": "device_lifecycle", "n_devices": 3, "n_orphans": 0})
+    with pytest.raises(ValueError, match="disagrees"):
+        ck_lifecycle.restore_lifecycle(path, NetworkState(3))
+    # unknown code value must refuse before touching the state
+    bad2 = dict(tree, lifecycle=np.array([7, 0, 0], dtype=np.int8),
+                alive_mask=np.array([False, True, True]))
+    path2 = str(tmp_path / "bad2")
+    ck_store.save(path2, bad2, metadata={
+        "kind": "device_lifecycle", "n_devices": 3, "n_orphans": 0})
+    with pytest.raises(ValueError, match="unknown lifecycle codes"):
+        ck_lifecycle.restore_lifecycle(path2, NetworkState(3))
+    # dtype smuggling (float codes) dies in the store's leaf validation
+    bad3 = dict(tree, lifecycle=tree["lifecycle"].astype(np.float32))
+    path3 = str(tmp_path / "bad3")
+    ck_store.save(path3, bad3, metadata={
+        "kind": "device_lifecycle", "n_devices": 3, "n_orphans": 0})
+    with pytest.raises(ValueError, match="dtype"):
+        ck_lifecycle.restore_lifecycle(path3, NetworkState(3))
+
+
+def test_lifecycle_enum_values_are_the_wire_encoding():
+    # the checkpoint encodes DeviceLifecycle.value directly: reordering
+    # the enum would silently corrupt every existing snapshot
+    assert DeviceLifecycle.UP.value == 0
+    assert DeviceLifecycle.DRAINING.value == 1
+    assert DeviceLifecycle.DOWN.value == 2

@@ -326,3 +326,43 @@ def test_request_from_arrival_derives_profile_deadlines():
     assert lp2.deadline == pytest.approx(
         prof.lp_deadline if prof.lp_deadline is not None
         else eng.default_lp_deadline)
+
+
+# --------------------------------------------------------------------- #
+# Watermark hysteresis: the rising edge must re-arm after a full drain  #
+# --------------------------------------------------------------------- #
+def test_on_pressure_rearms_after_full_drain_sawtooth():
+    """Sawtooth load: fill past the watermark, drain to empty, fill again.
+
+    ``on_pressure`` is a rising-edge signal — it must fire exactly once
+    per excursion above the soft watermark, and the falling-edge reset in
+    ``flush_window`` must re-arm it so the SECOND rising edge fires too
+    (a stuck ``_soft`` latch would silently disable degrade-style
+    policies for the rest of a long run).
+    """
+    eng = StreamingEngine(2, queue_capacity=4, soft_watermark=0.75,
+                          window=0.5)
+    edges = []
+    eng.shed_policy.on_pressure = (
+        lambda queue, engine: edges.append(queue.live))
+
+    # cycle 1: depth 3 crosses the watermark (0.75 * 4 = 3)
+    for _ in range(3):
+        eng.offer(_hp())
+    assert edges == [3], "first rising edge must fire exactly once"
+    eng.offer(_hp())                       # still soft: no second firing
+    assert edges == [3]
+    eng.flush_window(0.25)                 # full drain -> falling edge
+    assert eng.queue.live == 0
+
+    # cycle 2: the second excursion must fire again
+    for _ in range(3):
+        eng.offer(_hp())
+    assert edges == [3, 3], "hysteresis failed to re-arm after a drain"
+    eng.flush_window(0.5)
+    assert eng.queue.live == 0
+
+    # cycle 3: and keeps re-arming on every subsequent sawtooth
+    for _ in range(4):
+        eng.offer(_hp())
+    assert edges == [3, 3, 3]
