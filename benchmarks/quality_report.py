@@ -8,10 +8,18 @@ frame count, plus two small large-N tiers) and is scored against the
 
 * ``hp_completion_ratio``     — HP completion %, policy / oracle
 * ``frame_completion_ratio``  — frames fully completed %, policy / oracle
-* ``goodput_ratio``           — accuracy-weighted LP goodput, policy / oracle
-                                (profile accuracies weight each completed LP
-                                task; the paper workload is all-1.0, the
-                                mixed_edge profiles are not)
+* ``goodput_ratio``           — accuracy-weighted LP goodput, policy / oracle.
+                                Each completed LP task is weighted by the
+                                accuracy of the ladder rung it was ADMITTED
+                                at (``task.variant``, DESIGN.md §17), over a
+                                denominator of every generated task at full
+                                (rung-0) accuracy.  The paper workload is
+                                all-1.0 and ladder-free; mixed_edge varies
+                                accuracy across types; the ``paper_ladder``
+                                scenarios below vary it across variants —
+                                there the oracle enumerates variant columns,
+                                so the ratio certifies greedy-vs-optimal
+                                variant selection.
 
 The oracle is *per-decision* optimal, non-preemptive and non-clairvoyant
 (DESIGN.md §13) — so ratios are a calibrated yardstick, NOT bounded by 1.0:
@@ -20,7 +28,8 @@ because it can evict LP work the oracle must schedule around.  What the gate
 pins is that the paper scheduler's measured ratios never silently regress.
 
 Everything is seeded and deterministic, so the committed capture
-(``QUALITY_6.json``) reproduces exactly on any machine; the gate margin only
+(``QUALITY_10.json``; ``QUALITY_6.json`` is the pre-ladder capture, kept
+for history) reproduces exactly on any machine; the gate margin only
 absorbs environment drift (numpy versions etc.), not noise.
 
 Runs are deduplicated by their effective configuration: WPS_4 / DPW / CPW
@@ -31,9 +40,9 @@ oracle run serves every scenario sharing its base.
 Usage::
 
     PYTHONPATH=src python benchmarks/quality_report.py                 # table
-    PYTHONPATH=src python benchmarks/quality_report.py --json QUALITY_6.json
+    PYTHONPATH=src python benchmarks/quality_report.py --json QUALITY_10.json
     PYTHONPATH=src python benchmarks/quality_report.py --quick \\
-        --gate QUALITY_6.json                                          # CI
+        --gate QUALITY_10.json                                         # CI
 
 ``--json`` captures BOTH tiers (quick + full) and pins per-scenario gate
 floors at ``measured - margin`` for the gated policy.  ``--gate`` replays
@@ -62,8 +71,12 @@ from repro.sim.experiment import (                         # noqa: E402
 
 #: The policy whose ratios the CI gate pins (the paper's scheduler).
 GATED_POLICY = "scheduler"
-#: Ratios the gate enforces (goodput rides along as a report column).
-GATED_METRICS = ("hp_completion_ratio", "frame_completion_ratio")
+#: Ratios the gate enforces.  ``goodput_ratio`` joined the gated set with
+#: the variant ladder (DESIGN.md §17): it is the accuracy-weighted-goodput
+#: floor that pins degrade-before-reject's quality on the ladder scenarios
+#: (and rides along at ~all-1.0 accuracy everywhere else).
+GATED_METRICS = ("hp_completion_ratio", "frame_completion_ratio",
+                 "goodput_ratio")
 #: Floor = measured - MARGIN.  Runs are deterministic; the margin absorbs
 #: cross-environment drift only.
 MARGIN = 0.05
@@ -78,8 +91,21 @@ LARGE_N_SCENARIOS: dict[str, ScenarioConfig] = {
                            n_devices=16, seed=13),
 }
 
+#: Variant-ladder scenarios (DESIGN.md §17): the paper workload with a
+#: two-rung degradation ladder, with and without degrade-before-reject.
+#: The two differ ONLY in the degrade flag — ``_run_key`` must keep them
+#: apart (they share one oracle run, which enumerates the ladder either
+#: way and so bounds optimal variant selection for both).
+LADDER_SCENARIOS: dict[str, ScenarioConfig] = {
+    "LDPS": ScenarioConfig("LDPS", "weighted_4", "scheduler", True,
+                           workload="paper_ladder", degrade=True),
+    "LDNPS": ScenarioConfig("LDNPS", "weighted_4", "scheduler", True,
+                            workload="paper_ladder"),
+}
+
 ALL_SCENARIOS: dict[str, ScenarioConfig] = {
     **SCENARIOS, **MIXED_SCENARIOS, **LARGE_N_SCENARIOS,
+    **LADDER_SCENARIOS,
 }
 
 TIERS = {"quick": 20, "full": 40}            # n_frames per tier
@@ -88,12 +114,15 @@ TIERS = {"quick": 20, "full": 40}            # n_frames per tier
 def _run_key(cfg: ScenarioConfig, policy: str, n_frames: int) -> tuple:
     """Effective-configuration key — collapses scenarios that differ only
     in their (replaced) algorithm.  The oracle additionally ignores
-    preemption and victim selection."""
+    preemption, victim selection and the degrade flag (it enumerates the
+    variant ladder unconditionally); every other policy keys on ``degrade``
+    too, so configs differing only in degrade mode are NOT collapsed."""
     if policy == "oracle":
         return (policy, cfg.trace, cfg.workload, cfg.n_devices, cfg.seed,
                 n_frames)
     return (policy, cfg.trace, cfg.workload, cfg.n_devices, cfg.seed,
-            n_frames, cfg.preemption, cfg.victim_policy, cfg.lp_batch_window)
+            n_frames, cfg.preemption, cfg.victim_policy, cfg.lp_batch_window,
+            cfg.degrade)
 
 
 def _measure(cfg: ScenarioConfig, policy: str, n_frames: int) -> dict:
@@ -102,12 +131,16 @@ def _measure(cfg: ScenarioConfig, policy: str, n_frames: int) -> dict:
                          algorithm=policy, n_frames=n_frames))
     rt.run()
     s = rt.metrics.summary()
-    profiles = get_workload(cfg.workload).profiles
-    acc = {name: getattr(p, "accuracy", 1.0) for name, p in profiles.items()}
+    spec = get_workload(cfg.workload)
     lp_tasks = [t for req in rt.requests for t in req.tasks]
-    total = sum(acc.get(t.task_type, 1.0) for t in lp_tasks)
-    good = sum(acc.get(t.task_type, 1.0) for t in lp_tasks
-               if t.state == TaskState.COMPLETED)
+    # Denominator: every generated task at full (rung-0) accuracy — the
+    # maximum attainable.  Numerator: completed tasks at the accuracy of
+    # the ladder rung they were admitted at (variant 0 = the base profile,
+    # so ladder-free workloads score exactly as before).
+    total = sum(spec.profile(t.task_type).accuracy for t in lp_tasks)
+    good = sum(
+        spec.profile(t.task_type).variant_profile(t.variant).accuracy
+        for t in lp_tasks if t.state == TaskState.COMPLETED)
     return {
         "hp_completion_pct": s["hp_completion_pct"],
         "frame_completion_pct": s["frame_completion_pct"],

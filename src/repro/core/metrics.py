@@ -54,6 +54,19 @@ class Metrics:
     lp_shed: int = 0
     lp_degraded: int = 0
 
+    # Variant ladder (DESIGN.md §17) — accuracy-aware degradation.
+    # ``variant_admissions`` histograms LP allocations by the ladder rung
+    # they were admitted at (rung > 0 only; a legacy one-bit degrade on a
+    # ladder-free profile counts under rung 1).  ``lp_accuracy_completed``
+    # accumulates the admitted rung's benchmark accuracy over completed LP
+    # tasks — the numerator of accuracy-weighted goodput.  The accumulator
+    # runs unconditionally (deterministic, same order as lp_completed), but
+    # the summary keys appear only when some task ran degraded, so
+    # ladder-free summaries stay byte-identical.
+    variant_admissions: Counter = field(default_factory=Counter)
+    lp_accuracy_completed: float = 0.0
+    degrade_shrinks: int = 0        # degrade-instead-of-evict shrink count
+
     # Churn plane (DESIGN.md §16) — device lifecycle events and orphan
     # recovery.  Orphans are NOT a new terminal bucket: a recovered orphan
     # counts realloc_success (then completes or fails at runtime like any
@@ -156,6 +169,17 @@ class Metrics:
             out["hp_shed"] = self.hp_shed
             out["lp_shed"] = self.lp_shed
             out["lp_degraded"] = self.lp_degraded
+        if self.variant_admissions or self.degrade_shrinks:
+            # Present only when the variant ladder actually fired (a task
+            # was admitted below rung 0 or shrunk in place): ladder-free
+            # runs — every committed golden — keep their historic key set.
+            out["variant_admissions"] = {
+                str(v): n for v, n in sorted(self.variant_admissions.items())
+            }
+            out["degrade_shrinks"] = self.degrade_shrinks
+            out["accuracy_goodput_pct"] = round(
+                100.0 * self.lp_accuracy_completed / self.lp_generated, 2
+            ) if self.lp_generated else 0.0
         if (self.device_failures or self.device_drains
                 or self.device_rejoins or self.orphans_created):
             # Present only under churn: the closed-workload golden replays

@@ -101,6 +101,13 @@ class NetworkConfig:
         """The benchmark profile for a task type (None -> default type)."""
         return self.spec.profile(task_type)
 
+    def profile_for(self, task) -> TaskProfile:
+        """The profile a task actually runs at: its type's ladder rung
+        selected by ``task.variant`` (DESIGN.md §17).  Variant 0 — every
+        golden path — resolves to the base profile bit-identically."""
+        prof = self.spec.profile(task.task_type)
+        return prof.variant_profile(task.variant) if task.variant else prof
+
     def slot(self, n_bytes: int) -> float:
         """Duration of a padded link time-slot for an n-byte message."""
         return n_bytes / self.throughput_bps + self.jitter_pad_s

@@ -45,8 +45,9 @@ Backends
   ``tests/test_oracle.py``).
 * ``"cpsat"`` — ``ortools`` CP-SAT, behind a feature check (the container
   does not ship ortools; the backend raises a clear error when absent).
-* ``"auto"``  — brute below a search-space threshold, else MILP (brute
-  when scipy is unavailable).
+* ``"auto"``  — brute below a search-space threshold or at tiny job
+  counts (where the suffix-max bound beats MILP even at thousands of
+  option columns), else MILP (brute when scipy is unavailable).
 
 :class:`OraclePolicy` (registered as ``"oracle"``) applies the instance
 solver online, one decision at a time: HP admission via the closed-form
@@ -83,11 +84,25 @@ _ROUND = 9
 #: Default instance-size guards (DESIGN.md §13 — "oracle-sized" means a
 #: handful of tasks over a few devices; beyond these the instance raises).
 MAX_GRID = 4000
-MAX_OPTIONS = 20_000
+#: Above this many option columns BOTH backends degrade (brute's bound
+#: stops pruning enough; HiGHS crawls on near-degenerate binaries), so the
+#: instance errors and the policy falls back to singletons.  Variant
+#: ladders triple the columns per job, which is what pushed sustained-load
+#: joint instances from "slow" to "minutes each" at the old 20k cap;
+#: 6k keeps the worst measured joint solve under ~1 s at identical
+#: measured quality on the ladder scenarios.
+MAX_OPTIONS = 6_000
 MAX_SUMS = 20_000
 
 #: ``auto`` backend: brute-force below this assignment-space size.
 _BRUTE_SPACE = 20_000
+#: ``auto`` also prefers brute at or below this JOB count regardless of
+#: option count: the branch-and-bound's suffix-max bound makes its cost
+#: near-linear in options when the branching depth is tiny, while HiGHS
+#: degrades badly on thousands of near-degenerate binary columns (variant
+#: ladders triple the columns at nearly identical objective weights — a
+#: 2-job/4k-option ladder instance measured 0.03 s brute vs >170 s MILP).
+_BRUTE_JOBS = 3
 
 
 def _have_scipy_milp() -> bool:
@@ -115,6 +130,17 @@ class OracleInstanceError(ValueError):
 # Problem data                                                           #
 # ====================================================================== #
 @dataclass(frozen=True)
+class JobRung:
+    """One variant-ladder rung of an LP job (DESIGN.md §17): the same
+    shape as the job's base fields, at the rung's benchmark stats."""
+
+    accuracy: float
+    durations: Mapping[int, float]
+    completion_durations: Mapping[int, float]
+    xfer: float
+
+
+@dataclass(frozen=True)
 class OracleJob:
     """One task of the one-shot placement instance."""
 
@@ -132,7 +158,28 @@ class OracleJob:
     xfer: float                    # input-transfer link-slot duration
     offloadable: bool
     accuracy: float = 1.0
+    #: Variant-ladder rungs below the base (variant 0 = the fields above).
+    #: The oracle enumerates one option column per rung, so its optimum
+    #: covers every admissible variant choice — what the quality report's
+    #: accuracy-weighted-goodput ratio certifies the greedy ladder against.
+    rungs: tuple[JobRung, ...] = ()
     task: Optional[Task] = None    # backref for committing placements
+
+    @property
+    def n_variants(self) -> int:
+        return 1 + len(self.rungs)
+
+    def rung(self, variant: int) -> tuple[float, Mapping[int, float],
+                                          Mapping[int, float], float]:
+        """(accuracy, durations, completion_durations, xfer) at a rung;
+        variant 0 is the base, past-bottom clamps (the profiles'
+        ``variant_profile`` contract — ladder-free jobs always resolve to
+        the base)."""
+        if variant <= 0 or not self.rungs:
+            return (self.accuracy, self.durations,
+                    self.completion_durations, self.xfer)
+        r = self.rungs[min(variant, len(self.rungs)) - 1]
+        return r.accuracy, r.durations, r.completion_durations, r.xfer
 
 
 @dataclass(frozen=True)
@@ -147,6 +194,9 @@ class PlacementOption:
     completion: float              # start + completion duration
     offloaded: bool
     weight: float = 0.0
+    variant: int = 0               # ladder rung this option runs at
+    accuracy: float = 1.0          # the rung's benchmark accuracy
+    xfer: float = 0.0              # the rung's transfer (0 if local)
 
 
 @dataclass
@@ -226,16 +276,22 @@ class OracleInstance:
                     durations={1: prof.hp_slot_time},
                     completion_durations={1: prof.hp_exec},
                     xfer=0.0, offloadable=False,
-                    accuracy=getattr(prof, "accuracy", 1.0), task=task,
+                    accuracy=prof.accuracy, task=task,
                 ))
             else:
                 durs = {c: prof.lp_slot_time(c) for c in prof.core_options}
+                rungs = []
+                for v in range(1, prof.n_variants):
+                    rp = prof.variant_profile(v)
+                    rd = {c: rp.lp_slot_time(c) for c in rp.core_options}
+                    rungs.append(JobRung(rp.accuracy, rd, dict(rd),
+                                         net.slot(rp.input_bytes)))
                 jobs.append(OracleJob(
                     idx=i, is_hp=False, source_device=task.source_device,
                     release=now, deadline=task.deadline,
                     durations=durs, completion_durations=dict(durs),
                     xfer=net.slot(prof.input_bytes), offloadable=True,
-                    accuracy=getattr(prof, "accuracy", 1.0), task=task,
+                    accuracy=prof.accuracy, rungs=tuple(rungs), task=task,
                 ))
         horizon = max(
             j.deadline + max(
@@ -305,7 +361,10 @@ class OracleInstance:
         # they are also not needed as capacity checkpoints, because options
         # only *end* there and usage never increases at an end).
         self._max_start = max(
-            j.deadline - min(j.completion_durations.values()) for j in jobs
+            j.deadline - min(
+                min(j.rung(v)[2].values()) for v in range(j.n_variants)
+            )
+            for j in jobs
         ) + FEAS
         base: set[float] = {round(self.now, _ROUND)}
         for starts, _ in self.device_profiles.values():
@@ -319,14 +378,21 @@ class OracleInstance:
         # durations, the earliest time that much free link exists after
         # release.  (All jobs share the decision-time release.)
         self._free_segments_cache = self._free_link_segments()
-        xfers = sorted({round(j.xfer, _ROUND)
-                       for j in jobs if j.offloadable and j.xfer > FEAS})
+        # Each offloadable job contributes AT MOST ONE of its rung xfers to
+        # any schedule; unioning over the per-job alternatives closes the
+        # sums over every admissible variant choice.
         xfer_sums: set[float] = {0.0}
         for j in jobs:
-            if not j.offloadable or j.xfer <= FEAS:
+            if not j.offloadable:
                 continue
-            add = {round(s + j.xfer, _ROUND) for s in xfer_sums
-                   if s + j.xfer <= self.span}
+            alts = sorted({round(j.rung(v)[3], _ROUND)
+                           for v in range(j.n_variants)
+                           if j.rung(v)[3] > FEAS})
+            if not alts:
+                continue
+            add = {round(s + x, _ROUND)
+                   for s in xfer_sums for x in alts
+                   if s + x <= self.span}
             xfer_sums |= add
             if len(xfer_sums) > self.max_sums:
                 raise OracleInstanceError(
@@ -341,7 +407,8 @@ class OracleInstance:
         deltas: list[tuple[float, ...]] = []
         for j in jobs:
             opts = sorted({round(dur, _ROUND)
-                          for dur in j.durations.values()})
+                          for v in range(j.n_variants)
+                          for dur in j.rung(v)[1].values()})
             deltas.append(tuple(opts))
         sums: set[float] = {0.0}
         limit = self._max_start - self.now
@@ -357,17 +424,27 @@ class OracleInstance:
                 raise OracleInstanceError(
                     f"slot-duration subset-sums exceed {self.max_sums}")
 
+        # The base x sums product can reach millions of points on instances
+        # that are doomed anyway (ladder jobs carry up to 3x the distinct
+        # durations, so `sums` saturates fast under load) — check the cap
+        # INSIDE the loop so an over-sized instance fails in O(max_grid)
+        # instead of building the whole product first.  The now-FEAS floor
+        # is applied at insertion so the in-loop count is exact.
+        floor = self.now - FEAS
         pts: set[float] = set()
         for b in base:  # replint: disable=determinism-set-iter (set-to-set accumulation into `pts`; grid is sorted() at the end)
             if b > self._max_start:
-                if b <= self.horizon:
+                if b <= self.horizon and b >= floor:
                     pts.add(b)        # capacity breakpoint past last start
                 continue
             for s in sums:  # replint: disable=determinism-set-iter (set-to-set accumulation; order-free union)
                 v = round(b + s, _ROUND)
-                if v <= self._max_start:
+                if v <= self._max_start and v >= floor:
                     pts.add(v)
-        pts = {p for p in pts if p >= self.now - FEAS}
+            if len(pts) > self.max_grid:
+                raise OracleInstanceError(
+                    f"candidate grid exceeds {self.max_grid} points; "
+                    "the oracle is for oracle-sized instances (DESIGN.md §13)")
         if len(pts) > self.max_grid:
             raise OracleInstanceError(
                 f"candidate grid has {len(pts)} points (> {self.max_grid}); "
@@ -390,10 +467,10 @@ class OracleInstance:
             self.free[dev] = free
 
     # -- options -------------------------------------------------------- #
-    def _goodput(self, job: OracleJob, completion: float) -> float:
+    def _goodput(self, accuracy: float, completion: float) -> float:
         """Accuracy-weighted earliness in [0, 1): the objective tiebreak."""
         frac = max(0.0, 1.0 - (completion - self.now) / self.span)
-        return job.accuracy * min(frac, 1.0)
+        return accuracy * min(frac, 1.0)
 
     def _build_options(self) -> None:
         jobs, g = self.jobs, self.grid
@@ -401,7 +478,10 @@ class OracleInstance:
         # Weighted lexicographic objective: one HP completion outweighs
         # every possible LP gain (2n + 4 > 2n + 1), one completion of any
         # kind outweighs the total goodput tiebreak (2 > 1 > sum of
-        # per-job goodput terms scaled by 1/(n+1)).
+        # per-job goodput terms scaled by 1/(n+1)).  A completion counts
+        # the same at any ladder rung — accuracy enters through the
+        # goodput term only, so the oracle degrades exactly when doing so
+        # buys a completion (or a better accuracy-earliness product).
         self.w_total = 2.0
         self.w_hp = 2.0 * n + 4.0
         options: list[PlacementOption] = []
@@ -413,31 +493,37 @@ class OracleInstance:
                 if offloaded and not j.offloadable:
                     continue
                 free = self.free[dev]
-                for cores, dur in sorted(j.durations.items()):
-                    comp_dur = j.completion_durations[cores]
-                    lo = j.release + (j.xfer if offloaded else 0.0)
-                    hi = j.deadline - comp_dur + FEAS
-                    if hi < lo - FEAS:
-                        continue
-                    i1 = int(np.searchsorted(g, lo - FEAS, side="left"))
-                    i2 = int(np.searchsorted(g, hi + FEAS, side="right"))
-                    for gi in range(i1, i2):
-                        s = float(g[gi])
-                        e = s + dur
-                        # static feasibility against *existing* occupancy
-                        j2 = int(np.searchsorted(g, e - FEAS, side="left"))
-                        if j2 > gi and int(free[gi:j2].min()) < cores:
+                for variant in range(j.n_variants):
+                    acc, durs, comps, xfer = j.rung(variant)
+                    for cores, dur in sorted(durs.items()):
+                        comp_dur = comps[cores]
+                        lo = j.release + (xfer if offloaded else 0.0)
+                        hi = j.deadline - comp_dur + FEAS
+                        if hi < lo - FEAS:
                             continue
-                        comp = s + comp_dur
-                        w = (self.w_total
-                             + (self.w_hp if j.is_hp else 0.0)
-                             + self._goodput(j, comp) / (n + 1.0))
-                        options.append(PlacementOption(
-                            j.idx, dev, cores, s, e, comp, offloaded, w))
-                        if len(options) > self.max_options:
-                            raise OracleInstanceError(
-                                f"option count exceeds {self.max_options}; "
-                                "oracle-sized instances only (DESIGN.md §13)")
+                        i1 = int(np.searchsorted(g, lo - FEAS, side="left"))
+                        i2 = int(np.searchsorted(g, hi + FEAS, side="right"))
+                        for gi in range(i1, i2):
+                            s = float(g[gi])
+                            e = s + dur
+                            # static feasibility vs *existing* occupancy
+                            j2 = int(np.searchsorted(g, e - FEAS,
+                                                     side="left"))
+                            if j2 > gi and int(free[gi:j2].min()) < cores:
+                                continue
+                            comp = s + comp_dur
+                            w = (self.w_total
+                                 + (self.w_hp if j.is_hp else 0.0)
+                                 + self._goodput(acc, comp) / (n + 1.0))
+                            options.append(PlacementOption(
+                                j.idx, dev, cores, s, e, comp, offloaded,
+                                w, variant, acc,
+                                xfer if offloaded else 0.0))
+                            if len(options) > self.max_options:
+                                raise OracleInstanceError(
+                                    f"option count exceeds "
+                                    f"{self.max_options}; oracle-sized "
+                                    "instances only (DESIGN.md §13)")
         self.options = options
         self.by_job: list[list[int]] = [[] for _ in jobs]
         for oi, o in enumerate(options):
@@ -485,7 +571,7 @@ class OracleInstance:
                        and self.options[oi].start <= b + FEAS]
                 if not ois:
                     continue
-                xf = [self.jobs[self.options[oi].job].xfer for oi in ois]
+                xf = [self.options[oi].xfer for oi in ois]
                 rhs = self.free_link_time(a, b)
                 if sum(xf) <= rhs + LINK_TOL:
                     continue                    # can never bind
@@ -500,6 +586,7 @@ class OracleInstance:
             for ois in self.by_job:
                 space *= len(ois) + 1
             backend = ("brute" if space <= _BRUTE_SPACE
+                       or len(self.jobs) <= _BRUTE_JOBS
                        or not _have_scipy_milp() else "milp")
         if backend == "brute":
             return self._solve_brute()
@@ -512,7 +599,7 @@ class OracleInstance:
     def _solution(self, chosen: Sequence[int], backend: str) -> OracleSolution:
         placements = {self.options[oi].job: self.options[oi] for oi in chosen}
         hp = sum(1 for o in placements.values() if self.jobs[o.job].is_hp)
-        goodput = sum(self._goodput(self.jobs[o.job], o.completion)
+        goodput = sum(self._goodput(o.accuracy, o.completion)
                       for o in placements.values())
         objective = sum(self.options[oi].weight for oi in chosen)
         return OracleSolution(objective, hp, len(placements), goodput,
@@ -554,9 +641,8 @@ class OracleInstance:
             i1, i2 = self._opt_span[oi]
             if i2 > i1 and int(free[o.device][i1:i2].min()) < o.cores:
                 return False
-            xfer = self.jobs[o.job].xfer
             for ri in link_rows_of.get(oi, ()):
-                if link_used[ri] + xfer > self.link_rows[ri][2] + LINK_TOL:
+                if link_used[ri] + o.xfer > self.link_rows[ri][2] + LINK_TOL:
                     return False
             return True
 
@@ -564,9 +650,8 @@ class OracleInstance:
             o = self.options[oi]
             i1, i2 = self._opt_span[oi]
             free[o.device][i1:i2] -= sign * o.cores
-            xfer = self.jobs[o.job].xfer
             for ri in link_rows_of.get(oi, ()):
-                link_used[ri] += sign * xfer
+                link_used[ri] += sign * o.xfer
 
         def dfs(k: int, acc: float) -> None:
             nonlocal best_obj, best_chosen
@@ -704,7 +789,7 @@ class OracleInstance:
         offl = [o for o in placements if o.offloaded]
         for a in sorted({self.jobs[o.job].release for o in offl}):
             for b in sorted({o.start for o in offl}):
-                demand = sum(self.jobs[o.job].xfer for o in offl
+                demand = sum(o.xfer for o in offl
                              if self.jobs[o.job].release >= a - FEAS
                              and o.start <= b + FEAS)
                 assert demand <= self.free_link_time(a, b) + 1e-6, \
@@ -714,7 +799,9 @@ class OracleInstance:
         """Score a policy's committed placements of ``tasks`` (parallel to
         the instance's jobs) under the oracle objective.  A task counts as
         completed when it holds a slot whose model completion time meets
-        the deadline — exactly the instance's completion rule."""
+        the deadline — exactly the instance's completion rule.  A task
+        admitted at a ladder rung is scored at that rung's completion
+        duration and accuracy (``task.variant``, DESIGN.md §17)."""
         obj, hp, total, good = 0.0, 0, 0, 0.0
         n = len(self.jobs)
         for j, task in zip(self.jobs, tasks):
@@ -723,11 +810,11 @@ class OracleInstance:
             if task.state not in (TaskState.ALLOCATED, TaskState.RUNNING,
                                   TaskState.COMPLETED):
                 continue
-            comp = task.t_start + j.completion_durations.get(
-                task.cores, float("inf"))
+            acc, _, comps, _ = j.rung(task.variant)
+            comp = task.t_start + comps.get(task.cores, float("inf"))
             if comp > j.deadline + 1e-6:
                 continue
-            g = self._goodput(j, comp)
+            g = self._goodput(acc, comp)
             obj += (self.w_total + (self.w_hp if j.is_hp else 0.0)
                     + g / (n + 1.0))
             hp += 1 if j.is_hp else 0
@@ -824,14 +911,14 @@ class OraclePolicy(CalendarPolicy):
                 dev = self.state.devices[o.device]
                 dev.reserve(o.start, o.end, o.cores, task)
                 if o.offloaded:
-                    self._commit_transfer(task, now, o.start,
-                                          self.net.slot(
-                                              self.net.profile(
-                                                  task.task_type).input_bytes))
+                    # o.xfer is the chosen rung's input transfer (the base
+                    # profile's for variant 0 — the historic behaviour).
+                    self._commit_transfer(task, now, o.start, o.xfer)
                 task.state = TaskState.ALLOCATED
                 task.device, task.cores = o.device, o.cores
                 task.t_start, task.t_end = o.start, o.end
                 task.offloaded = o.offloaded
+                task.variant = o.variant
                 placed[task] = Allocation(task, o.device, o.start, o.end,
                                           o.cores, o.offloaded)
         return placed

@@ -514,6 +514,11 @@ class PolicyDispatcher:
         m = self.metrics
         m.lp_allocated += 1
         m.count_type(task.task_type, "lp_allocated")
+        if task.variant > 0:
+            # variant-ladder histogram (DESIGN.md §17): the rung the task
+            # was admitted at — covers pre-degraded streaming admissions
+            # and the scheduler's degrade-before-reject retries alike
+            m.variant_admissions[task.variant] += 1
         bucket = (m.core_alloc_offloaded if offloaded
                   else m.core_alloc_local)
         bucket[cores] += 1
@@ -543,6 +548,10 @@ class PolicyDispatcher:
                 self.client.on_hp_complete(task)
         elif not late:
             m.lp_completed += 1
+            # accuracy-weighted goodput numerator: the admitted rung's
+            # benchmark accuracy (1.0 on every ladder-free path; the
+            # summary key only appears when the ladder fired)
+            m.lp_accuracy_completed += self.net.profile_for(task).accuracy
             if task.offloaded:
                 m.lp_offloaded_completed += 1
             self.client.on_lp_complete(task)
@@ -629,12 +638,13 @@ class SchedulerPolicy(CalendarPolicy):
                  victim_policy: str = "farthest_deadline",
                  metrics: Optional[Metrics] = None,
                  allow_offload: bool = True,
-                 preemption_plane: bool = True, **_ignored) -> None:
+                 preemption_plane: bool = True,
+                 degrade: bool = False, **_ignored) -> None:
         super().__init__(n_devices, net, capacity=capacity, metrics=metrics)
         self.sched = PreemptionAwareScheduler(
             self.state, net, preemption=preemption, metrics=self.metrics,
             victim_policy=victim_policy, allow_offload=allow_offload,
-            preemption_plane=preemption_plane,
+            preemption_plane=preemption_plane, degrade=degrade,
         )
 
     def decide_hp(self, task: Task, now: float) -> Decision:
@@ -735,7 +745,7 @@ class EDFOnlyPolicy(CalendarPolicy):
 
     def _place_lp(self, task: Task, now: float, deadline: float) -> Optional[Allocation]:
         net, link = self.net, self.state.link
-        prof = net.profile(task.task_type)
+        prof = net.profile_for(task)            # the task's ladder rung
         cores = prof.core_options[0]
         proc = prof.lp_slot_time(cores)
         msg_dur = net.slot(net.msg.lp_alloc)

@@ -33,6 +33,26 @@ from typing import Callable, Mapping, Optional
 PAPER_TYPE = "paper"
 
 
+@dataclass(frozen=True)
+class VariantSpec:
+    """One degraded rung of a task type's variant ladder (DESIGN.md §17).
+
+    A rung swaps the model for a cheaper variant of itself: lower benchmark
+    accuracy, faster per-core-configuration exec stats, and (optionally)
+    smaller transfer sizes.  Rung costs must be monotone non-increasing down
+    the ladder — enforced by :class:`TaskProfile` at construction — so every
+    skip-hint lower bound that holds for a rung also holds for the rungs
+    below it.  ``input_bytes``/``output_bytes`` of ``None`` inherit the base
+    profile's sizes.
+    """
+
+    accuracy: float
+    lp_exec: Mapping[int, float]         # cores -> stage-3 exec mean, seconds
+    lp_pad: Mapping[int, float]          # cores -> stage-3 slot padding
+    input_bytes: Optional[int] = None    # None -> inherit the base profile
+    output_bytes: Optional[int] = None   # None -> inherit the base profile
+
+
 @dataclass(frozen=True, eq=False)
 class TaskProfile:
     """Offline-benchmarked resource demands for one task type.
@@ -60,6 +80,12 @@ class TaskProfile:
     #: tiebreak and the quality report's accuracy-weighted goodput metric.
     #: The paper's single-model world keeps the neutral 1.0.
     accuracy: float = 1.0
+    #: Degradation ladder (DESIGN.md §17): ordered cheaper rungs BELOW this
+    #: profile.  This profile itself is variant 0, so an empty tuple (the
+    #: default) is the ladder-free world — bit-identical to every committed
+    #: golden.  Rung ``i`` resolves through :meth:`variant_profile` to a
+    #: derived profile named ``"{name}@{i}"``.
+    variants: tuple[VariantSpec, ...] = ()
 
     def __post_init__(self) -> None:
         if not self.lp_exec:
@@ -76,6 +102,87 @@ class TaskProfile:
                            dict(sorted(self.lp_exec.items())))
         object.__setattr__(self, "lp_pad",
                            {c: self.lp_pad[c] for c in self.lp_exec})
+        object.__setattr__(self, "variants", tuple(self.variants))
+        object.__setattr__(self, "_ladder", self._build_ladder())
+
+    def _build_ladder(self) -> tuple["TaskProfile", ...]:
+        """Derive one full :class:`TaskProfile` per rung, validating that
+        accuracy and cost are monotone non-increasing down the ladder and
+        that rungs keep the base core-configuration set (so an in-place
+        degrade-shrink can always re-use the victim's core count)."""
+        derived: list[TaskProfile] = []
+        prev: TaskProfile = self
+        for i, v in enumerate(self.variants, start=1):
+            if not (0.0 < v.accuracy <= 1.0):
+                raise ValueError(
+                    f"profile {self.name!r} variant {i}: accuracy "
+                    f"{v.accuracy} outside (0, 1]"
+                )
+            if v.accuracy > prev.accuracy:
+                raise ValueError(
+                    f"profile {self.name!r} variant {i}: accuracy "
+                    f"{v.accuracy} exceeds the rung above ({prev.accuracy}) "
+                    "— ladders must be monotone non-increasing"
+                )
+            if set(v.lp_exec) != set(self.lp_exec):
+                raise ValueError(
+                    f"profile {self.name!r} variant {i}: core configs "
+                    f"{sorted(v.lp_exec)} != base configs "
+                    f"{sorted(self.lp_exec)} — rungs must benchmark the "
+                    "base profile's core configurations"
+                )
+            vp = TaskProfile(
+                name=f"{self.name}@{i}",
+                hp_exec=self.hp_exec,
+                hp_pad=self.hp_pad,
+                lp_exec=dict(v.lp_exec),
+                lp_pad=dict(v.lp_pad),
+                input_bytes=(self.input_bytes if v.input_bytes is None
+                             else v.input_bytes),
+                output_bytes=(self.output_bytes if v.output_bytes is None
+                              else v.output_bytes),
+                hp_deadline_slack=self.hp_deadline_slack,
+                lp_deadline=self.lp_deadline,
+                accuracy=v.accuracy,
+            )
+            for cores in vp.core_options:
+                if vp.lp_slot_time(cores) > prev.lp_slot_time(cores):
+                    raise ValueError(
+                        f"profile {self.name!r} variant {i}: slot time at "
+                        f"{cores} cores ({vp.lp_slot_time(cores):.3f}s) "
+                        f"exceeds the rung above "
+                        f"({prev.lp_slot_time(cores):.3f}s) — ladders must "
+                        "be monotone non-increasing"
+                    )
+            if vp.input_bytes > self.input_bytes:
+                raise ValueError(
+                    f"profile {self.name!r} variant {i}: input_bytes "
+                    f"{vp.input_bytes} exceeds the base {self.input_bytes} "
+                    "— a degraded transfer may not grow"
+                )
+            derived.append(vp)
+            prev = vp
+        return tuple(derived)
+
+    @property
+    def n_variants(self) -> int:
+        """Ladder depth including variant 0 (this profile itself)."""
+        return 1 + len(self.variants)
+
+    @property
+    def ladder(self) -> tuple["TaskProfile", ...]:
+        """The full ladder, variant 0 (self) first."""
+        return (self,) + self._ladder
+
+    def variant_profile(self, variant: int = 0) -> "TaskProfile":
+        """The profile for one ladder rung.  Variant 0 is this profile;
+        indices past the bottom clamp to the last rung.  Ladder-free
+        profiles answer every index with themselves — which is exactly the
+        legacy one-bit ``Task.degraded`` semantics (same exec stats, the
+        upgrade pass pinned off)."""
+        if variant <= 0 or not self._ladder:
+            return self
+        return self._ladder[min(variant, len(self._ladder)) - 1]
 
     @property
     def core_options(self) -> tuple[int, ...]:
@@ -163,8 +270,15 @@ class WorkloadSpec:
     @property
     def min_lp_slot_time(self) -> float:
         """Network-wide minimum-config slot duration lower bound (valid for
-        every task type; used by the scheduler's skip-hint pruning)."""
-        return min(p.min_lp_slot_time for p in self.profiles.values())
+        every task type AND every ladder rung — degraded variants only ever
+        get cheaper; used by the scheduler's skip-hint pruning)."""
+        return min(v.min_lp_slot_time
+                   for p in self.profiles.values() for v in p.ladder)
+
+    @property
+    def has_ladder(self) -> bool:
+        """True when any profile carries degraded rungs (DESIGN.md §17)."""
+        return any(p.n_variants > 1 for p in self.profiles.values())
 
     @property
     def max_input_bytes_type(self) -> str:
@@ -368,5 +482,56 @@ def _mixed_edge() -> WorkloadSpec:
     )
 
 
+def _paper_ladder() -> WorkloadSpec:
+    """The paper's pipeline with a two-rung degradation ladder (DESIGN.md
+    §17): variant 0 is the published benchmark table bit-for-bit; the rungs
+    below are a distilled and a heavily-quantized variant of the same model
+    (faster, smaller inputs, lower accuracy — the imprecise-computation
+    setting of Yao et al. in PAPERS.md).  The scenario of choice for the
+    ``degrade_storm`` family and the quality report's ladder column."""
+    from dataclasses import replace
+
+    base = WorkloadSpec.from_paper_constants().profile()
+    laddered = replace(base, variants=(
+        # distilled: ~55% of the base exec, keeps most of the accuracy
+        VariantSpec(accuracy=0.92,
+                    lp_exec={2: 9.120, 4: 6.270},
+                    lp_pad={2: 0.250, 4: 0.250},
+                    input_bytes=12800),
+        # int8-quantized: ~25% of the base exec, accuracy floor
+        VariantSpec(accuracy=0.78,
+                    lp_exec={2: 4.310, 4: 2.985},
+                    lp_pad={2: 0.150, 4: 0.150},
+                    input_bytes=6400),
+    ))
+    return WorkloadSpec(name="paper_ladder",
+                        profiles={laddered.name: laddered},
+                        default_type=PAPER_TYPE)
+
+
+def _mixed_edge_ladder() -> WorkloadSpec:
+    """``mixed_edge`` with ladders on the two heavy types: the paper model
+    gets the ``paper_ladder`` rungs, the detection transformer a single
+    pruned rung; the already-light mobile classifier stays single-variant
+    (mixed ladder depths exercise the clamp-to-bottom path)."""
+    from dataclasses import replace
+
+    spec = _mixed_edge()
+    paper = _paper_ladder().profile()
+    detr = replace(spec.profiles["detr_heavy"], variants=(
+        VariantSpec(accuracy=0.87,
+                    lp_exec={2: 14.820, 4: 10.450},
+                    lp_pad={2: 0.350, 4: 0.350},
+                    input_bytes=32200),
+    ))
+    profiles = dict(spec.profiles)
+    profiles[paper.name] = paper
+    profiles[detr.name] = detr
+    return WorkloadSpec(name="mixed_edge_ladder", profiles=profiles,
+                        default_type=spec.default_type, mix=dict(spec.mix))
+
+
 register_workload(PAPER_TYPE, WorkloadSpec.from_paper_constants)
 register_workload("mixed_edge", _mixed_edge)
+register_workload("paper_ladder", _paper_ladder)
+register_workload("mixed_edge_ladder", _mixed_edge_ladder)

@@ -61,11 +61,14 @@ from .calendar import EPS, NetworkState, Reservation
 from .metrics import Metrics
 from .network import NetworkConfig
 from .task import LowPriorityRequest, Priority, Task, TaskState
-from .victims import GOOD_STATES, rank_victims, victim_sort_key
+from .victims import GOOD_STATES, plan_shrink, rank_victims, victim_sort_key
 
 #: Victim-selection rules accepted by the preemption mechanism (also the
-#: options surfaced by ``ScenarioConfig`` validation).
-VICTIM_POLICIES = ("farthest_deadline", "weakest_set")
+#: options surfaced by ``ScenarioConfig`` validation).  ``degrade_shrink``
+#: ranks like ``farthest_deadline`` but first tries to shrink the chosen
+#: victim in place down its variant ladder (DESIGN.md §17), evicting only
+#: when no viable shrink exists.
+VICTIM_POLICIES = ("farthest_deadline", "weakest_set", "degrade_shrink")
 
 
 def _dev_up(dev) -> bool:
@@ -218,12 +221,18 @@ class PreemptionAwareScheduler:
         victim_policy: str = "farthest_deadline",
         allow_offload: bool = True,
         preemption_plane: bool = True,
+        degrade: bool = False,
     ) -> None:
         self.state = state
         self.net = net
         self.preemption = preemption
         self.allow_offload = allow_offload
         self.metrics = metrics if metrics is not None else Metrics()
+        # Degrade-before-reject (DESIGN.md §17): when an LP task cannot be
+        # placed at its current ladder rung, retry the admission down the
+        # task type's variant ladder before settling it FAILED.  Off by
+        # default — every golden path runs reject-only.
+        self.degrade = degrade
         # Callback into the runtime so a running victim is actually stopped.
         self.on_preempt = on_preempt
         # Victim selection among conflicting LP reservations:
@@ -234,12 +243,18 @@ class PreemptionAwareScheduler:
         #                        fewest healthy siblings — so preemption
         #                        destroys the least prospective frame value;
         #                        tie-break by farthest deadline.
+        #   "degrade_shrink"     degrade-instead-of-evict (DESIGN.md §17):
+        #                        same ranking as farthest_deadline, but the
+        #                        chosen victim is shrunk in place down its
+        #                        variant ladder when viable (core/victims.py
+        #                        plan_shrink), evicted only otherwise.
         if victim_policy not in VICTIM_POLICIES:
             raise ValueError(
                 f"unknown victim_policy {victim_policy!r}; expected one of "
                 + ", ".join(VICTIM_POLICIES)
             )
         self.victim_policy = victim_policy
+        self._degrade_evict = victim_policy == "degrade_shrink"
         self._requests: dict[int, LowPriorityRequest] = {}
         self._requests_prune_at = 256
         # link reservations per task, so preemption/reallocation can cancel
@@ -321,10 +336,10 @@ class PreemptionAwareScheduler:
         # (DESIGN.md §12) or the scalar differential reference.
         e_wall = _time.perf_counter()
         if self._preempt_plane:
-            plan, preempted = self._evict_conflicts_plane(
+            plan, preempted, shrunk = self._evict_conflicts_plane(
                 dev, plan, placement, now)
         else:
-            plan, preempted = self._evict_conflicts_scalar(
+            plan, preempted, shrunk = self._evict_conflicts_scalar(
                 dev, plan, placement, now)
         self.metrics.t_evict.append(_time.perf_counter() - e_wall)
 
@@ -336,16 +351,22 @@ class PreemptionAwareScheduler:
             # reallocation guarantee and skewed the realloc accounting
             # (tests/test_victim_lifecycle.py::
             # test_failed_hp_admission_still_reallocates_victims).
-            return HPResult(False, preempted=preempted,
-                            reallocations=self._reallocate_victims(preempted,
-                                                                   now))
+            return HPResult(
+                False, preempted=preempted + shrunk,
+                reallocations=self._reallocate_victims(preempted, now)
+                + self._rearm_shrunk(shrunk))
         msg_t1, t1, t2 = plan
 
         alloc = self._commit_hp(task, msg_t1, msg_dur, t1, t2)
 
-        # 4. attempt to reallocate every victim before its deadline
-        return HPResult(True, alloc, preempted,
-                        self._reallocate_victims(preempted, now))
+        # 4. attempt to reallocate every victim before its deadline.
+        # Shrunk victims ride the same two result lists as a
+        # preempted-then-reallocated victim: ``preempted`` cancels their
+        # stale execution event, ``reallocations`` re-arms the shortened
+        # slot — to the dispatcher the two are indistinguishable.
+        return HPResult(True, alloc, preempted + shrunk,
+                        self._reallocate_victims(preempted, now)
+                        + self._rearm_shrunk(shrunk))
 
     # ------------------------------------------------------------------ #
     # Preemption: eviction loop (vectorized plane + scalar reference)    #
@@ -369,16 +390,57 @@ class PreemptionAwareScheduler:
         if self.on_preempt is not None:
             self.on_preempt(victim)
 
+    def _shrink_victim(self, dev, victim: Task, new_end: float,
+                       now: float) -> None:
+        """Degrade-instead-of-evict one victim (DESIGN.md §17): drop it to
+        the next ladder rung at its current core count and truncate its
+        reservation to the shorter slot.  ``truncate`` updates the skyline
+        AND the preemption plane's LP-mirror row in place (a re-reserve
+        would append a fresh mirror row behind the eviction loop's column
+        views).  The victim stays ALLOCATED; its link slots stay reserved
+        (the input already shipped at the admitted rung's size, and the
+        update slot at the old end is simply a late update).  A resize
+        notification occupies the link like a preempt message, so the
+        caller must re-derive the HP window afterwards."""
+        net, link = self.net, self.state.link
+        dev.truncate(victim, new_end)
+        victim.variant += 1
+        victim.t_end = new_end
+        self.metrics.degrade_shrinks += 1
+        self.metrics.lp_degraded += 1
+        msg_dur = net.slot(net.msg.preempt)
+        link.reserve_earliest(msg_dur, now, ("degrade", victim.task_id))
+
+    def _try_shrink(self, dev, victim: Task, t1: float, t2: float,
+                    now: float) -> bool:
+        """Shrink ``victim`` out of the HP window [t1, t2) when the
+        ``degrade_shrink`` policy is active and a viable plan exists."""
+        if not self._degrade_evict:
+            return False
+        new_end = plan_shrink(victim, self.net.profile(victim.task_type),
+                              t1, t2, now, EPS)
+        if new_end is None:
+            return False
+        self._shrink_victim(dev, victim, new_end, now)
+        return True
+
+    def _rearm_shrunk(self, shrunk: list[Task]) -> list[Allocation]:
+        """Fresh Allocation records for shrunk victims, so the dispatcher
+        re-arms their (shortened) slots exactly like reallocated victims."""
+        return [Allocation(t, t.device, t.t_start, t.t_end, t.cores,
+                           t.offloaded) for t in shrunk]
+
     def _evict_conflicts_scalar(self, dev, plan, placement, now: float):
         """The scalar eviction loop, kept verbatim as the differential
         reference for the vectorized plane (the `calendar_reference`
         pattern): per iteration it rebuilds the conflicting-LP list with a
         Python sweep over every reservation on the device and picks one
-        victim with ``min()``.  Returns ``(plan, preempted)``; ``plan`` is
-        None when the preempt messages pushed the window past the task's
-        deadline."""
+        victim with ``min()``.  Returns ``(plan, preempted, shrunk)``;
+        ``plan`` is None when the preempt messages pushed the window past
+        the task's deadline."""
         msg_t1, t1, t2 = plan
         preempted: list[Task] = []
+        shrunk: list[Task] = []
         while not dev.fits(t1, t2, 1):
             conflicts = [
                 r
@@ -390,13 +452,20 @@ class PreemptionAwareScheduler:
             if not conflicts:
                 break
             victim_res = min(conflicts, key=self._victim_key)
-            self._preempt_victim(dev, victim_res.tag, victim_res.amount, now)
-            preempted.append(victim_res.tag)
-            plan = placement()              # link moved; re-derive the window
+            victim = victim_res.tag
+            if self._try_shrink(dev, victim, t1, t2, now):
+                if victim not in shrunk:
+                    shrunk.append(victim)
+            else:
+                self._preempt_victim(dev, victim, victim_res.amount, now)
+                preempted.append(victim)
+                if victim in shrunk:    # shrunk earlier, evicted after all
+                    shrunk.remove(victim)
+            plan = placement()          # link moved; re-derive the window
             if plan is None:
-                return None, preempted
+                return None, preempted, shrunk
             msg_t1, t1, t2 = plan
-        return plan, preempted
+        return plan, preempted, shrunk
 
     def _evict_conflicts_plane(self, dev, plan, placement, now: float):
         """Vectorized eviction (DESIGN.md §12), decision-identical to
@@ -430,7 +499,7 @@ class PreemptionAwareScheduler:
         if m == 0:
             # no LP reservations at all -> the scalar loop's first conflict
             # sweep comes back empty and it breaks immediately
-            return plan, []
+            return plan, [], []
         ct1, ct2, camt = mir.t1[:m], mir.t2[:m], mir.amount[:m]
         alive = mir.alive[:m]       # live view: release flips rows in place
         tasks = mir.tasks
@@ -438,6 +507,7 @@ class PreemptionAwareScheduler:
         goods: dict[int, int] = {}      # per-request good-state counters,
         sizes: dict[int, int] = {}      # built lazily per ranked candidate
         preempted: list[Task] = []
+        shrunk: list[Task] = []
         # Grid horizon: the window plus the drift this loop's own preempt
         # messages can cause (each pushes the re-derived window later by at
         # most its own link slot) — covers long eviction chains without a
@@ -476,9 +546,27 @@ class PreemptionAwareScheduler:
             victim = tasks[idx]
             vt1, vt2 = float(ct1[idx]), float(ct2[idx])
             vamt = int(camt[idx])
+            if self._try_shrink(dev, victim, t1, t2, now):
+                # The truncate synced ct2[idx] in place (mirror row), so the
+                # candidate mask stays exact — but the new endpoint need not
+                # align with the grid's breakpoints, so a partial-segment
+                # delta would under-free.  Rebuild instead (the established
+                # exact fallback; the flushed skyline already reflects the
+                # truncation) after re-deriving the drifted window.
+                if victim not in shrunk:
+                    shrunk.append(victim)
+                plan = placement()      # link moved; re-derive the window
+                if plan is None:
+                    return None, preempted, shrunk
+                msg_t1, t1, t2 = plan
+                grid = _HPWindowGrid(dev, t1, t2 + drift + 0.5 * (t2 - t1),
+                                     ct1, ct2, alive)
+                continue
             was_good = victim.state in GOOD_STATES
             self._preempt_victim(dev, victim, vamt, now)   # flips alive[idx]
             preempted.append(victim)
+            if victim in shrunk:        # shrunk earlier, evicted after all
+                shrunk.remove(victim)
             if weakest and was_good and victim.request_id in goods:
                 # the eviction moved the victim out of its set's good
                 # states; its still-candidate siblings weaken accordingly
@@ -486,9 +574,9 @@ class PreemptionAwareScheduler:
             grid.evict(vt1, vt2, vamt)
             plan = placement()          # link moved; re-derive the window
             if plan is None:
-                return None, preempted
+                return None, preempted, shrunk
             msg_t1, t1, t2 = plan
-        return plan, preempted
+        return plan, preempted, shrunk
 
     def _cand_health(self, task: Task, goods: dict, sizes: dict) -> float:
         """`_set_health` backed by the eviction loop's incremental
@@ -522,6 +610,13 @@ class PreemptionAwareScheduler:
         for victim in victims:
             r_wall = _time.perf_counter()
             re = self._allocate_lp_task(victim, now, victim.deadline, ctx)
+            if re is None and self.degrade:
+                # degrade-before-reject: retry down the victim's ladder
+                # before settling it FAILED.  The retry commits through its
+                # own context, so the shared memo must be invalidated.
+                re = self._degrade_retry(victim, now, victim.deadline)
+                if re is not None:
+                    ctx["valid"] = False
             self.metrics.t_realloc.append(_time.perf_counter() - r_wall)
             if re is not None:
                 victim.state = TaskState.ALLOCATED
@@ -636,6 +731,13 @@ class PreemptionAwareScheduler:
             # upgrade pass: try to give every allocated task more cores
             self._upgrade_pass(result.allocations, hints)
 
+        for task in list(unallocated):
+            # degrade-before-reject (DESIGN.md §17): the base rung failed
+            # across the whole grid; retry down the ladder before FAILED.
+            alloc = self._degrade_retry(task, now, deadline)
+            if alloc is not None:
+                unallocated.remove(task)
+                result.allocations.append(alloc)
         result.failed = unallocated
         for t in unallocated:
             t.state = TaskState.FAILED
@@ -713,15 +815,17 @@ class PreemptionAwareScheduler:
 
     def _task_t1_off(self, ctx: dict, tp: float, task: Task) -> float:
         """The offloaded execution start a task would see at ``tp``."""
-        prof = self.net.profile(task.task_type)
+        prof = self.net.profile_for(task)
         return self._profile_ctx(self._refresh_ctx(ctx, tp), prof)["t1_off"]
 
     def _round_hint(self, round_hints: dict, tp: float,
                     task: Task) -> Optional[float]:
         """`_hint_start` for the task's profile, computed lazily once per
         (time-point, profile) — every same-type task failing a full scan at
-        the same time-point shares the bound."""
-        prof = self.net.profile(task.task_type)
+        the same time-point shares the bound.  Profiles resolve through the
+        task's ladder rung (``profile_for``); variant profiles carry
+        distinct names, so rungs memoise separately."""
+        prof = self.net.profile_for(task)
         if prof.name not in round_hints:
             round_hints[prof.name] = self._hint_start(tp, prof)
         return round_hints[prof.name]
@@ -870,8 +974,19 @@ class PreemptionAwareScheduler:
                 for item in pending:
                     deadline, _, ridx, task = item
                     if deadline <= tp + EPS:
-                        task.state = TaskState.FAILED
-                        results[ridx].failed.append(task)
+                        # the sweep passed the request deadline at the base
+                        # rung; degrade-before-reject gets one ladder retry
+                        # over the original window before FAILED settles
+                        alloc = self._degrade_retry(task, now, deadline)
+                        if alloc is not None:
+                            ctx["valid"] = False    # retry committed
+                            round_hints.clear()     # occupancy grew
+                            results[ridx].allocations.append(alloc)
+                            progressed.add(ridx)
+                            push_tp(alloc.t_end)
+                        else:
+                            task.state = TaskState.FAILED
+                            results[ridx].failed.append(task)
                         continue
                     hint = hints.get(task.task_id)
                     if hint is not None and \
@@ -937,7 +1052,11 @@ class PreemptionAwareScheduler:
                 if nxt is None:
                     break
                 tp = nxt
-            for _, _, ridx, task in pending:      # deadline passed mid-sweep
+            for d, _, ridx, task in pending:      # deadline passed mid-sweep
+                alloc = self._degrade_retry(task, now, d)
+                if alloc is not None:
+                    results[ridx].allocations.append(alloc)
+                    continue
                 task.state = TaskState.FAILED
                 results[ridx].failed.append(task)
         share = (_time.perf_counter() - t_wall) / max(len(requests), 1)
@@ -958,6 +1077,8 @@ class PreemptionAwareScheduler:
             self.state.devices[task.device].release(task)
         self.links.cancel_pending(self.state.link, task.task_id, now)
         alloc = self._allocate_lp_task(task, now, task.deadline)
+        if alloc is None:
+            alloc = self._degrade_retry(task, now, task.deadline)
         self.metrics.t_realloc.append(_time.perf_counter() - r_wall)
         if alloc is not None:
             task.state = TaskState.ALLOCATED
@@ -1030,6 +1151,37 @@ class PreemptionAwareScheduler:
         self.state.rejoin_device(idx)
         self.metrics.device_rejoins += 1
 
+    def _degrade_retry(self, task: Task, now: float,
+                       deadline: float) -> Optional[Allocation]:
+        """Degrade-before-reject (DESIGN.md §17): one ladder walk for an
+        otherwise-failed LP task.
+
+        Runs only at SETTLE time — after the base-rung search exhausted the
+        whole time-point grid — never per time-point, so a task is only
+        degraded when its current rung provably cannot be placed anywhere
+        in its window (accuracy is sacrificed last, not first).  Each
+        deeper rung re-walks the §4 grid through the normal placement path
+        (`_allocate_lp_task` resolves the rung's profile; variant profiles
+        carry distinct names, so the probe memos stay sound).  On success
+        the task keeps the admitted rung in ``task.variant`` and counts
+        ``lp_degraded``; on failure the original rung is restored and the
+        caller settles FAILED (this helper assigns no terminal state).
+        """
+        if not self.degrade or task.priority is not Priority.LOW:
+            return None
+        base = self.net.profile(task.task_type)
+        original = task.variant
+        for rung in range(original + 1, base.n_variants):
+            task.variant = rung
+            ctx: dict = {}
+            for tp in self._time_point_grid(now, deadline):
+                alloc = self._allocate_lp_task(task, tp, deadline, ctx)
+                if alloc is not None:
+                    self.metrics.lp_degraded += 1
+                    return alloc
+        task.variant = original
+        return None
+
     def _allocate_lp_task(
         self, task: Task, tp: float, deadline: float,
         ctx: Optional[dict] = None,
@@ -1052,7 +1204,7 @@ class PreemptionAwareScheduler:
           O(devices) scan.  A commit invalidates the context.
         """
         net, link = self.net, self.state.link
-        prof = net.profile(task.task_type)
+        prof = net.profile_for(task)            # the task's ladder rung
         cores = prof.core_options[0]            # minimum viable config
         proc = prof.lp_slot_time(cores)
         if ctx is None:

@@ -54,11 +54,14 @@ class Task:
     task_type: Optional[str] = None
     task_id: int = field(default_factory=lambda: next(_task_ids))
     state: TaskState = TaskState.PENDING
-    # Load-shedding degrade mode (serving/stream.py): a degraded LP task is
-    # pinned to its profile's minimum core configuration — the scheduler's
-    # core-upgrade pass skips it, so it keeps the smallest possible resource
-    # footprint under overload.  Never set on the closed-workload paths.
-    degraded: bool = False
+    # Variant-ladder rung (core/profiles.py, DESIGN.md §17): index into the
+    # task type's degradation ladder.  0 = the full-accuracy base profile
+    # (every closed-workload golden path); a positive index resolves through
+    # TaskProfile.variant_profile to a cheaper rung, and pins the
+    # scheduler's core-upgrade pass off.  For ladder-free profiles a
+    # positive index keeps the base exec stats — exactly the legacy one-bit
+    # degrade semantics.
+    variant: int = 0
     # Filled in by the scheduler on allocation:
     device: Optional[int] = None
     cores: int = 0
@@ -71,6 +74,19 @@ class Task:
     @property
     def is_high(self) -> bool:
         return self.priority == Priority.HIGH
+
+    @property
+    def degraded(self) -> bool:
+        """Deprecated one-bit view of the variant ladder: any rung below
+        variant 0 counts as degraded (pre-ladder callers keep working)."""
+        return self.variant > 0
+
+    @degraded.setter
+    def degraded(self, flag: bool) -> None:
+        if flag:
+            self.variant = max(self.variant, 1)
+        else:
+            self.variant = 0
 
     def __hash__(self) -> int:
         return self.task_id

@@ -37,6 +37,48 @@ from .task import Task, TaskState
 GOOD_STATES = (TaskState.COMPLETED, TaskState.ALLOCATED, TaskState.RUNNING)
 
 
+def plan_shrink(victim: Task, profile, hp_t1: float, hp_t2: float,
+                now: float, eps: float = 1e-9) -> Optional[float]:
+    """Degrade-instead-of-evict (DESIGN.md §17): the new reservation end if
+    this conflict victim can be shrunk in place, else None (fall back to
+    eviction).
+
+    A shrink downgrades the victim to the NEXT rung of its type's variant
+    ladder at its CURRENT core count.  Ladder validation guarantees the
+    rung's slot at the same cores is no longer than the previous rung's, so
+    the downgraded footprint is a pure truncation of the existing
+    reservation — it always fits, and applying it via the calendar's
+    ``truncate`` keeps the preemption plane's LP mirror row in place (a
+    re-reserve would append a new row behind the eviction loop's column
+    views).  Viability rules:
+
+    * the victim holds a future slot (``ALLOCATED``, start after ``now``) —
+      a RUNNING victim's execution was sized by its admitted rung and
+      cannot be resized mid-flight, so it falls back to eviction;
+    * a deeper rung exists (ladder-free profiles never shrink);
+    * the truncation strictly reduces the victim's footprint inside the
+      contested HP window ``[hp_t1, hp_t2)`` — equal-length rungs (the
+      ladder allows non-strict monotonicity) shrink nothing and must not
+      stall the eviction loop.
+
+    What this does NOT guarantee: that the freed tail alone makes the HP
+    window fit — the loop re-checks and keeps selecting victims, so a
+    shrunk victim may still be evicted later in the same admission.
+    """
+    if victim.state is not TaskState.ALLOCATED or victim.t_start <= now + eps:
+        return None
+    nxt = victim.variant + 1
+    if nxt >= profile.n_variants:
+        return None
+    rung = profile.variant_profile(nxt)
+    new_end = victim.t_start + rung.lp_slot_time(victim.cores)
+    if new_end >= min(victim.t_end, hp_t2) - eps:
+        return None                     # no strict footprint reduction
+    if new_end > victim.deadline:
+        return None                     # defensive; t_end <= deadline anyway
+    return new_end
+
+
 def victim_sort_key(
     task: Task, policy: str,
     set_health: Optional[Callable[[Task], float]] = None,

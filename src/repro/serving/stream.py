@@ -24,11 +24,11 @@ Load shedding is pluggable (``@register_shed_policy``):
 * ``reject_newest``  — queue full ⇒ the incoming request is shed.
 * ``reject_cheapest`` — queue full ⇒ shed the least valuable queued work
   (LP before HP, then smallest estimated core-seconds, then newest).
-* ``degrade`` — at the soft watermark, downgrade queued LP requests to
-  their cheapest core configuration (``Task.degraded`` pins them to
-  ``core_options[0]`` — the scheduler's upgrade pass skips them); a full
-  queue still sheds like ``reject_cheapest``.  ``DegradeThenReject.degrade``
-  is the extension hook for richer accuracy ladders (ROADMAP).
+* ``degrade`` — at the soft watermark, walk queued LP requests one rung
+  down their task type's variant ladder (DESIGN.md §17; for ladder-free
+  profiles the single legacy rung pins tasks to ``core_options[0]`` — the
+  scheduler's upgrade pass skips them); a full queue still sheds like
+  ``reject_cheapest``.
 
 Backpressure is a three-state signal returned by :meth:`StreamingEngine.offer`:
 ``ACCEPTED`` (below the watermark), ``SOFT`` (queue above its high
@@ -129,12 +129,25 @@ class StreamRequest:
     rid: Optional[int] = None             # assigned by the engine
     # lifecycle: queued -> admitted -> done | failed, or queued -> shed
     state: str = "queued"
-    degraded: bool = False
+    # Variant-ladder rung (DESIGN.md §17) the request is currently queued
+    # at; the degrade shed policy walks it down, and admission stamps it
+    # onto the request's tasks.  0 = full accuracy.
+    variant: int = 0
     shed_reason: Optional[str] = None     # "queue_full" | "expired"
     est_cost: float = 0.0                 # estimated core-seconds (shedding)
     completed_at: float = -1.0
     _remaining: int = 0                   # live tasks still unresolved
     _failed: bool = False                 # any task failed / missed deadline
+
+    @property
+    def degraded(self) -> bool:
+        """Deprecated one-bit view of the variant ladder (pre-ladder
+        callers keep working): any rung below 0 counts as degraded."""
+        return self.variant > 0
+
+    @degraded.setter
+    def degraded(self, flag: bool) -> None:
+        self.variant = max(self.variant, 1) if flag else 0
 
 
 @dataclass(frozen=True)
@@ -289,29 +302,42 @@ class RejectCheapest(ShedPolicy):
 @register_shed_policy("degrade")
 class DegradeThenReject(RejectCheapest):
     """Degrade before dropping: at the soft watermark every queued LP
-    request is downgraded to its cheapest core configuration; a full
-    queue degrades the incoming LP request too, then sheds like
-    ``reject_cheapest``.
+    request steps one rung down its task type's variant ladder (DESIGN.md
+    §17); a full queue degrades the incoming LP request too, then sheds
+    like ``reject_cheapest``.
 
-    :meth:`degrade` is the extension hook: the default pins the request's
-    tasks to ``core_options[0]`` via ``Task.degraded`` (the scheduler's
-    core-upgrade pass skips them).  A richer ladder — swap to a distilled
-    model, drop ``max_new_tokens`` — subclasses here without touching the
-    engine.
+    :meth:`degrade` walks the real ladder: each call moves the request one
+    rung deeper and re-estimates its shed cost at the new rung, so repeated
+    pressure edges keep cutting until the ladder bottoms out.  For a
+    ladder-free profile the single legacy rung pins the request's tasks to
+    ``core_options[0]`` via ``Task.degraded`` (the scheduler's core-upgrade
+    pass skips them) — exactly the pre-ladder behavior.
     """
 
-    def degrade(self, req: StreamRequest, engine: "StreamingEngine") -> None:
-        req.degraded = True
+    def degrade(self, req: StreamRequest, engine: "StreamingEngine") -> bool:
+        prof = engine.net.profile(req.task_type)
+        if req.variant + 1 < prof.n_variants:
+            req.variant += 1
+        elif prof.n_variants == 1 and req.variant == 0:
+            req.variant = 1      # legacy pin: base stats at minimum cores
+        else:
+            return False         # ladder exhausted
+        # re-estimate the shed cost at the admitted rung, so the
+        # reject_cheapest fallback ranks degraded work by what it now costs
+        rung = prof.variant_profile(req.variant)
+        cores = rung.core_options[0]
+        req.est_cost = req.n_tasks * rung.lp_slot_time(cores) * cores
         engine.telemetry.degraded += 1
         engine.metrics.lp_degraded += 1
+        return True
 
     def on_pressure(self, queue, engine):
         for r in queue.iter_live():
-            if r.priority == Priority.LOW and not r.degraded:
+            if r.priority == Priority.LOW:
                 self.degrade(r, engine)
 
     def pick_victim(self, queue, incoming, engine):
-        if incoming.priority == Priority.LOW and not incoming.degraded:
+        if incoming.priority == Priority.LOW:
             self.degrade(incoming, engine)
         return super().pick_victim(queue, incoming, engine)
 
@@ -556,9 +582,9 @@ class StreamingEngine:
                     frame_id=req.rid, n_tasks=req.n_tasks,
                     created_at=req.arrival, task_type=req.task_type)
                 tasks = lr.make_tasks()
-                if req.degraded:
+                if req.variant:
                     for task in tasks:
-                        task.degraded = True
+                        task.variant = req.variant
                 req._remaining = len(tasks)
                 for task in tasks:
                     self._by_task[task] = req

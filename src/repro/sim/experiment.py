@@ -55,6 +55,12 @@ class ScenarioConfig:
     # "paper" is the seed's single-model pipeline; "mixed_edge" interleaves
     # three model profiles with distinct benchmarks and deadlines.
     workload: str = PAPER_TYPE
+    # Degrade-before-reject admission (DESIGN.md §17): on LP infeasibility
+    # the scheduler retries down the task type's variant ladder before
+    # emitting a rejection.  Off by default so every committed golden stays
+    # bit-identical; only the calendar scheduler honours it (edf_only and
+    # the workstealers absorb and ignore the knob).
+    degrade: bool = False
 
     def __post_init__(self) -> None:
         if self.algorithm not in registered_policies():
@@ -144,6 +150,7 @@ class Runtime:
             preemption=cfg.preemption,
             victim_policy=cfg.victim_policy,
             metrics=self.metrics,
+            degrade=cfg.degrade,
         )
         self.dispatcher = PolicyDispatcher(
             self.policy, self.q, self.net, self.metrics,
@@ -157,7 +164,9 @@ class Runtime:
 
     # -- execution-time noise + contention model -------------------------- #
     def exec_time(self, task: Task, busy_frac: float = 0.0) -> float:
-        prof = self.net.profile(task.task_type)
+        # profile_for resolves the task's admitted ladder rung (variant 0 =
+        # the base profile, the historic behaviour for every golden run).
+        prof = self.net.profile_for(task)
         if task.priority == Priority.HIGH:
             base, sigma, coef = prof.hp_exec, self.cfg.hp_noise_sigma, \
                 self.net.hp_contention_coef

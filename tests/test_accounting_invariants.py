@@ -115,14 +115,22 @@ def test_completed_census_matches_counters(base, policy):
 # --------------------------------------------------------------------- #
 # Streaming path: the shed bucket joins the partition                   #
 # --------------------------------------------------------------------- #
+@pytest.mark.parametrize("degrade", [False, True])
 @pytest.mark.parametrize("shed", sorted(registered_shed_policies()))
 @pytest.mark.parametrize("policy", ["scheduler", "edf_only"])
-def test_streaming_partition_includes_shed_bucket(shed, policy):
+def test_streaming_partition_includes_shed_bucket(shed, policy, degrade):
     reset_id_counters()
+    # degrade mode runs over the variant ladder (DESIGN.md §17): the
+    # scheduler retries infeasible LP admissions down the ladder before
+    # rejecting.  Degradation must never open a sixth terminal bucket —
+    # a degraded task still ends COMPLETED / FAILED / shed like any other.
     eng = StreamingEngine(4, policy=policy, queue_capacity=16, shed=shed,
-                          window=0.5)
-    # paper-profile tasks at a rate 4 devices cannot sustain: guarantees
-    # queue saturation, so every terminal bucket (including shed) is hit
+                          window=0.5,
+                          workload="paper_ladder" if degrade else "paper",
+                          policy_kwargs={"degrade": degrade})
+    # paper-profile tasks at ~10x the rate 4 devices can sustain:
+    # guarantees queue saturation, so every terminal bucket (including
+    # shed) is hit
     cfg = FirehoseConfig(n_devices=4, rate=40.0, seed=13)
     report = eng.run(firehose(cfg, limit=1000))
     m = eng.metrics
@@ -141,6 +149,12 @@ def test_streaming_partition_includes_shed_bucket(shed, policy):
     tel = eng.telemetry
     assert tel.shed_total == tel.shed_queue_full + tel.shed_expired
     assert tel.offered == m.hp_generated + m.lp_requests_total
+    # accuracy accounting stays inside the partition: the accumulator
+    # covers completed tasks only, each weighted by an accuracy in (0, 1]
+    assert 0.0 <= m.lp_accuracy_completed <= m.lp_completed + 1e-9
+    if not degrade:
+        assert m.lp_degraded == 0 or shed == "degrade"
+        assert not m.variant_admissions or shed == "degrade"
 
 
 # --------------------------------------------------------------------- #
@@ -262,3 +276,56 @@ def test_disabled_churn_injector_runs_bit_identical_to_no_churn():
     assert base == wired
     assert "churn" not in base["telemetry"], \
         "zero-churn snapshots must keep their historic key set"
+
+
+# --------------------------------------------------------------------- #
+# Ladder-disabled differential: the degrade machinery with no ladder    #
+# (or no degrade flag) is bit-identical to the pre-ladder engine        #
+# --------------------------------------------------------------------- #
+def test_degrade_mode_on_ladder_free_workload_is_bit_identical():
+    """With a ladder-free workload, degrade-before-reject has no rungs to
+    retry (``range(1, 1)`` is empty), so enabling the flag must replay
+    byte-identically — the goldens therefore cover the ladder-capable
+    engine without regeneration (same pattern as the zero-churn
+    differential above)."""
+    def go(degrade):
+        reset_id_counters()
+        eng = StreamingEngine(4, queue_capacity=64, window=0.5,
+                              policy_kwargs={"degrade": degrade})
+        cfg = FirehoseConfig(n_devices=4, rate=10.0, seed=21)
+        report = eng.run(firehose(cfg, limit=200))
+        report["metrics"] = {k: v for k, v in report["metrics"].items()
+                             if not k.startswith("t_")}
+        report["telemetry"].pop("admission_latency_s", None)
+        return report
+
+    base, laddered = go(False), go(True)
+    assert base == laddered
+    assert "variant_admissions" not in base["metrics"], \
+        "ladder-free summaries must keep their historic key set"
+
+
+def test_degrade_flag_on_ladder_free_scenario_is_bit_identical():
+    """Closed-workload counterpart: ``ScenarioConfig(degrade=True)`` over
+    the paper workload replays the golden path bit-for-bit."""
+    def go(degrade):
+        rt = _run(replace(BASES["weighted4_p"], degrade=degrade),
+                  "scheduler")
+        return {k: v for k, v in rt.metrics.summary().items()
+                if not k.startswith("t_")}
+
+    assert go(False) == go(True)
+
+
+def test_degrade_shrink_on_ladder_free_equals_farthest_deadline():
+    """The ``degrade_shrink`` victim policy ranks victims exactly like
+    ``farthest_deadline`` and can never shrink a ladder-free victim
+    (``plan_shrink`` finds no deeper rung), so on the paper workload the
+    two victim policies replay bit-identically."""
+    def go(victim_policy):
+        rt = _run(replace(BASES["weighted4_p"],
+                          victim_policy=victim_policy), "scheduler")
+        return {k: v for k, v in rt.metrics.summary().items()
+                if not k.startswith("t_")}
+
+    assert go("farthest_deadline") == go("degrade_shrink")

@@ -1,0 +1,364 @@
+"""Variant ladder (DESIGN.md §17): degradation as a scheduling dimension.
+
+Covers the ladder end to end:
+
+* **profiles** — ladder construction/validation, ``variant_profile``
+  clamping, the variant-0 equivalence invariant;
+* **task** — the deprecated one-bit ``degraded`` view over ``variant``;
+* **scheduler** — degrade-before-reject settle retries and the
+  ``degrade_shrink`` victim policy (degrade-instead-of-evict);
+* **serving** — the degrade shed policy walking a real ladder;
+* **oracle** — variant option columns: the optimum degrades exactly when
+  a completion (or a better accuracy-earliness product) is bought;
+* **storm** — the degrade_storm gate scenario: strictly higher
+  accuracy-weighted goodput at equal-or-better HP completion.
+"""
+import pytest
+
+from repro.core.calendar import NetworkState
+from repro.core.metrics import Metrics
+from repro.core.network import resolve_network
+from repro.core.oracle import OracleInstance
+from repro.core.profiles import (
+    TaskProfile,
+    VariantSpec,
+    get_workload,
+)
+from repro.core.scheduler import PreemptionAwareScheduler
+from repro.core.task import (
+    LowPriorityRequest,
+    Priority,
+    Task,
+    TaskState,
+    reset_id_counters,
+)
+
+LADDER = "paper_ladder"
+
+
+def _scheduler(n_devices=1, capacity=4, workload=LADDER, **kw):
+    net = resolve_network(None, workload)
+    m = Metrics("ladder")
+    state = NetworkState(n_devices, capacity=capacity)
+    return PreemptionAwareScheduler(state, net, metrics=m, **kw), net, m, \
+        state
+
+
+def _lp(source=0, deadline=100.0, frame_id=0, n_tasks=1):
+    req = LowPriorityRequest(source_device=source, deadline=deadline,
+                             frame_id=frame_id, n_tasks=n_tasks)
+    req.make_tasks()
+    return req
+
+
+# --------------------------------------------------------------------- #
+# Profiles: ladder construction + the variant-0 equivalence invariant   #
+# --------------------------------------------------------------------- #
+def test_ladder_profiles_validate_and_derive_rungs():
+    spec = get_workload(LADDER)
+    prof = spec.profile(None)
+    assert prof.n_variants == 3
+    assert len(prof.ladder) == 3
+    # variant 0 IS the base profile object (bit-identical stats)
+    assert prof.variant_profile(0) is prof
+    prev = prof
+    for v in range(1, prof.n_variants):
+        rung = prof.variant_profile(v)
+        assert rung.name == f"{prof.name}@{v}"
+        assert rung.accuracy <= prev.accuracy
+        assert set(rung.lp_exec) == set(prof.lp_exec)
+        for c in prof.core_options:
+            assert rung.lp_slot_time(c) <= prev.lp_slot_time(c)
+        assert rung.input_bytes <= prof.input_bytes
+        prev = rung
+    # past-bottom clamps to the deepest rung
+    bottom = prof.variant_profile(prof.n_variants - 1)
+    assert prof.variant_profile(99) is bottom
+
+
+def test_ladder_free_profile_resolves_every_variant_to_itself():
+    prof = get_workload("paper").profile(None)
+    assert prof.n_variants == 1
+    for v in (0, 1, 7):
+        assert prof.variant_profile(v) is prof
+
+
+def test_ladder_validation_rejects_non_monotone_rungs():
+    base = get_workload("paper").profile(None)
+
+    def bad(spec):
+        return TaskProfile(
+            name="bad", hp_exec=base.hp_exec, hp_pad=base.hp_pad,
+            lp_exec=dict(base.lp_exec), lp_pad=dict(base.lp_pad),
+            variants=(spec,),
+        )
+
+    with pytest.raises(ValueError, match="accuracy"):
+        bad(VariantSpec(accuracy=1.5, lp_exec=dict(base.lp_exec),
+                        lp_pad=dict(base.lp_pad)))
+    with pytest.raises(ValueError, match="monotone"):
+        # a rung SLOWER than the base is not a degradation
+        bad(VariantSpec(
+            accuracy=0.9,
+            lp_exec={c: t * 2.0 for c, t in base.lp_exec.items()},
+            lp_pad=dict(base.lp_pad)))
+    with pytest.raises(ValueError, match="core config"):
+        # a rung must keep the base core-configuration set
+        bad(VariantSpec(accuracy=0.9, lp_exec={2: 1.0}, lp_pad={2: 0.1}))
+
+
+def test_task_degraded_property_is_a_view_over_variant():
+    t = Task(priority=Priority.LOW, source_device=0, deadline=1.0,
+             frame_id=0)
+    assert t.variant == 0 and not t.degraded
+    t.variant = 2
+    assert t.degraded
+    t.degraded = False
+    assert t.variant == 0
+    t.degraded = True
+    assert t.variant == 1          # legacy one-bit degrade = rung 1
+    t.variant = 2
+    t.degraded = True              # setting True never UN-degrades
+    assert t.variant == 2
+
+
+def test_network_profile_for_resolves_the_admitted_rung():
+    net = resolve_network(None, LADDER)
+    t = Task(priority=Priority.LOW, source_device=0, deadline=1.0,
+             frame_id=0)
+    base = net.profile(None)
+    assert net.profile_for(t) is base
+    t.variant = 1
+    assert net.profile_for(t).name == f"{base.name}@1"
+
+
+# --------------------------------------------------------------------- #
+# Scheduler: degrade-before-reject                                      #
+# --------------------------------------------------------------------- #
+def test_degrade_before_reject_admits_at_a_deeper_rung():
+    reset_id_counters()
+    sched, net, m, _ = _scheduler(degrade=True)
+    prof = net.profile(None)
+    # Saturate [0, ~17.3) with two 2-core sets, then offer a request whose
+    # deadline fits only a rung-1 slot appended after them.
+    sched.allocate_low_priority(_lp(n_tasks=2), 0.0)
+    deadline = prof.lp_slot_time(2) + \
+        prof.variant_profile(1).lp_slot_time(4) + 1.0
+    res = sched.allocate_low_priority(_lp(deadline=deadline, frame_id=1),
+                                      0.0)
+    assert not res.failed and len(res.allocations) == 1
+    task = res.allocations[0].task
+    assert task.variant >= 1
+    assert task.state is TaskState.ALLOCATED
+    assert m.lp_degraded == 1
+    assert res.allocations[0].t_end <= deadline + 1e-9
+
+
+def test_degrade_before_reject_still_rejects_past_the_ladder_bottom():
+    reset_id_counters()
+    sched, net, m, _ = _scheduler(degrade=True)
+    sched.allocate_low_priority(_lp(n_tasks=2), 0.0)
+    # deadline shorter than even the deepest rung's minimum slot: reject
+    res = sched.allocate_low_priority(_lp(deadline=1.0, frame_id=1), 0.0)
+    assert len(res.failed) == 1
+    task = res.failed[0]
+    assert task.state is TaskState.FAILED
+    assert task.variant == 0, \
+        "a failed retry must restore the original variant"
+
+
+def test_degrade_disabled_rejects_where_the_ladder_would_admit():
+    reset_id_counters()
+    sched, net, m, _ = _scheduler(degrade=False)
+    prof = net.profile(None)
+    sched.allocate_low_priority(_lp(n_tasks=2), 0.0)
+    deadline = prof.lp_slot_time(2) + \
+        prof.variant_profile(1).lp_slot_time(4) + 1.0
+    res = sched.allocate_low_priority(_lp(deadline=deadline, frame_id=1),
+                                      0.0)
+    assert len(res.failed) == 1
+    assert m.lp_degraded == 0
+
+
+# --------------------------------------------------------------------- #
+# Scheduler: degrade-instead-of-evict (degrade_shrink victim policy)    #
+# --------------------------------------------------------------------- #
+def _shrink_setup():
+    """The shrink geometry: a victim holding a FUTURE slot whose tail
+    blocks the earliest HP window the backlogged link allows."""
+    reset_id_counters()
+    sched, net, m, state = _scheduler(victim_policy="degrade_shrink")
+    # W fills [0, ~17.3) on the only device; V queues behind it.
+    sched.allocate_low_priority(_lp(n_tasks=2), 0.0)
+    rv = sched.allocate_low_priority(_lp(deadline=200.0, frame_id=1), 0.0)
+    victim = rv.allocations[0].task
+    assert victim.t_start > 5.0, "victim must hold a future slot"
+    # Preempt messages cannot leave before the backlog clears, so the HP
+    # window lands inside the victim's TAIL — where a rung-1 truncation
+    # clears it.
+    state.link.reserve(0.0, victim.t_start + 9.5, ("backlog", 0))
+    hp = Task(priority=Priority.HIGH, source_device=0, frame_id=2,
+              deadline=victim.t_start + 14.0, created_at=5.0)
+    return sched, net, m, victim, hp
+
+
+def test_degrade_shrink_truncates_the_victim_in_place():
+    sched, net, m, victim, hp = _shrink_setup()
+    old_end = victim.t_end
+    res = sched.allocate_high_priority(hp, 5.0)
+    assert res.success
+    assert m.degrade_shrinks == 1
+    assert victim.variant == 1
+    assert victim.state is TaskState.ALLOCATED
+    assert victim.t_end < old_end
+    # the truncated footprint is exactly the rung-1 slot at the SAME cores
+    rung = net.profile(None).variant_profile(1)
+    assert victim.t_end == pytest.approx(
+        victim.t_start + rung.lp_slot_time(victim.cores))
+    # the shrunk victim rides the preempted/reallocations pair so the
+    # dispatcher cancels its stale exec event and re-arms the new slot
+    assert victim in res.preempted
+    assert any(a.task is victim and a.t_end == victim.t_end
+               for a in res.reallocations)
+    # no eviction happened: nothing went PREEMPTED or FAILED
+    assert m.preemptions == 0
+
+
+def test_degrade_shrink_falls_back_to_eviction_without_a_ladder():
+    reset_id_counters()
+    sched, net, m, state = _scheduler(workload="paper",
+                                      victim_policy="degrade_shrink")
+    sched.allocate_low_priority(_lp(n_tasks=2), 0.0)
+    rv = sched.allocate_low_priority(_lp(deadline=200.0, frame_id=1), 0.0)
+    victim = rv.allocations[0].task
+    state.link.reserve(0.0, victim.t_start + 9.5, ("backlog", 0))
+    hp = Task(priority=Priority.HIGH, source_device=0, frame_id=2,
+              deadline=victim.t_start + 14.0, created_at=5.0)
+    res = sched.allocate_high_priority(hp, 5.0)
+    assert res.success
+    assert m.degrade_shrinks == 0
+    assert m.preemptions >= 1, "ladder-free profiles must evict as before"
+
+
+# --------------------------------------------------------------------- #
+# Oracle: variant option columns                                        #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["brute", "milp"])
+def test_oracle_degrades_exactly_when_it_buys_a_completion(backend):
+    reset_id_counters()
+    net = resolve_network(None, LADDER)
+    state = NetworkState(1, capacity=4)
+    prof = net.profile(None)
+    # Deadline admits the rung-1 slot at 4 cores but not the base slot at
+    # any cores: the optimum must place the task degraded.
+    tight = prof.variant_profile(1).lp_slot_time(4) + 0.5
+    task = Task(priority=Priority.LOW, source_device=0, deadline=tight,
+                frame_id=0)
+    inst = OracleInstance.from_state(state, net, [task], 0.0)
+    sol = inst.solve(backend)
+    assert sol.completed == 1
+    chosen = sol.placements[0]
+    assert chosen.variant >= 1
+    assert chosen.accuracy < prof.accuracy
+    inst.verify(sol)
+    # With a loose deadline the same instance stays at variant 0: the
+    # goodput tiebreak prefers the (earlier-finishing, higher-accuracy)
+    # product only when it wins — at equal start, deeper rungs finish
+    # earlier but pay accuracy, and the base rung must still be on offer.
+    loose = Task(priority=Priority.LOW, source_device=0, deadline=100.0,
+                 frame_id=1)
+    inst2 = OracleInstance.from_state(state, net, [loose], 0.0)
+    sol2 = inst2.solve(backend)
+    assert sol2.completed == 1
+    assert {o.variant for o in inst2.options if o.job == 0} >= {0, 1, 2}
+    inst2.verify(sol2)
+
+
+def test_oracle_score_tasks_uses_the_admitted_rung():
+    reset_id_counters()
+    net = resolve_network(None, LADDER)
+    state = NetworkState(1, capacity=4)
+    prof = net.profile(None)
+    task = Task(priority=Priority.LOW, source_device=0, deadline=100.0,
+                frame_id=0)
+    inst = OracleInstance.from_state(state, net, [task], 0.0)
+    rung = prof.variant_profile(1)
+    # commit a rung-1 placement by hand and score it
+    task.state = TaskState.ALLOCATED
+    task.t_start, task.cores = 0.0, 4
+    task.t_end = rung.lp_slot_time(4)
+    task.variant = 1
+    _, (hp, total, good) = inst.score_tasks([task])
+    assert (hp, total) == (0, 1)
+    frac = 1.0 - (task.t_end - 0.0) / inst.span
+    assert good == pytest.approx(rung.accuracy * frac)
+
+
+# --------------------------------------------------------------------- #
+# Serving: the degrade shed policy walks the real ladder                #
+# --------------------------------------------------------------------- #
+def test_stream_degrade_shed_walks_the_ladder_then_exhausts():
+    from repro.serving.stream import StreamingEngine, StreamRequest
+
+    eng = StreamingEngine(2, workload=LADDER, shed="degrade")
+    req = StreamRequest(priority=Priority.LOW, deadline=10.0, n_tasks=2)
+    prof = eng.net.profile(None)
+    policy = eng.shed_policy
+    costs = []
+    while policy.degrade(req, eng):
+        costs.append(req.est_cost)
+    assert req.variant == prof.n_variants - 1, \
+        "the walk must stop at the ladder bottom"
+    assert costs == sorted(costs, reverse=True), \
+        "each rung must shrink the estimated cost"
+    assert eng.metrics.lp_degraded == prof.n_variants - 1
+
+
+def test_stream_request_degraded_property_mirrors_task_semantics():
+    from repro.serving.stream import StreamRequest
+
+    req = StreamRequest(priority=Priority.LOW, deadline=1.0)
+    assert not req.degraded and req.variant == 0
+    req.degraded = True
+    assert req.variant == 1
+    req.variant = 2
+    req.degraded = True
+    assert req.variant == 2
+    req.degraded = False
+    assert req.variant == 0
+
+
+# --------------------------------------------------------------------- #
+# Metrics: conditional summary keys                                     #
+# --------------------------------------------------------------------- #
+def test_ladder_summary_keys_appear_only_when_the_ladder_fires():
+    m = Metrics("x")
+    m.lp_generated = 10
+    m.lp_completed = 5
+    m.lp_accuracy_completed = 5.0
+    assert "variant_admissions" not in m.summary()
+    assert "accuracy_goodput_pct" not in m.summary()
+    m.variant_admissions[1] += 3
+    s = m.summary()
+    assert s["variant_admissions"] == {"1": 3}
+    assert s["degrade_shrinks"] == 0
+    assert s["accuracy_goodput_pct"] == pytest.approx(50.0)
+
+
+# --------------------------------------------------------------------- #
+# The storm gate: the acceptance pin, in-suite                          #
+# --------------------------------------------------------------------- #
+def test_degrade_storm_smoke_gate_holds():
+    """The PR's acceptance property: under a saturating degrade storm,
+    degrade-before-reject achieves STRICTLY higher accuracy-weighted
+    goodput than reject-only at equal-or-better HP completion.  CI runs
+    the same gate standalone (``python -m repro.sim.degrade_storm``)."""
+    from repro.sim.degrade_storm import STORM_SCENARIOS, run_storm, \
+        storm_gate
+
+    cfg = STORM_SCENARIOS["smoke"]
+    result = run_storm(cfg)
+    assert storm_gate(result, cfg) == []
+    assert result["degrade"]["lp_degraded"] > 0
+    assert result["awg_gain_pct"] >= cfg.min_awg_gain_pct
+    assert result["hp_delta_pct"] >= -cfg.hp_slack_pct
